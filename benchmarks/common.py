@@ -1,0 +1,156 @@
+"""Shared benchmark utilities: timing, baselines, CSV emission.
+
+Baselines (all on the SAME JAX substrate so the comparison isolates the
+index, not the framework):
+
+  fullscan   no index at all — brute force over every point (the
+             paper's "Spark" baseline).
+  binsearch  one sorted array + searchsorted, no partitioner, no spline
+             (classic sort-based index; isolates the partitioning win).
+  gridonly   spatial partitioning + per-partition FULL scan refine, no
+             learned interval (the paper's "Sedona-N"-like two-phase
+             baseline; isolates the learned-index win).
+  lilis      partitioner + learned spline/radix windowed paths.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BENCH_N = int(os.environ.get("BENCH_N", 200_000))
+BENCH_Q = int(os.environ.get("BENCH_Q", 64))
+REPEAT = int(os.environ.get("BENCH_REPEAT", 3))
+
+_rows = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")
+    _rows.append((name, us_per_call, derived))
+
+
+def timeit(fn, repeat: int = REPEAT):
+    fn()  # compile / warm
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6  # us
+
+
+# ---------------------------------------------------------------------------
+# baseline engines
+# ---------------------------------------------------------------------------
+
+class FullScanEngine:
+    """No index: brute force over all points (vectorized, jitted)."""
+
+    def __init__(self, x, y):
+        self.x = jnp.asarray(x)
+        self.y = jnp.asarray(y)
+
+        @jax.jit
+        def _range(rects):
+            m = ((self.x[None, :] >= rects[:, 0:1]) &
+                 (self.x[None, :] <= rects[:, 2:3]) &
+                 (self.y[None, :] >= rects[:, 1:2]) &
+                 (self.y[None, :] <= rects[:, 3:4]))
+            return jnp.sum(m.astype(jnp.int32), axis=1)
+
+        @jax.jit
+        def _point(qx, qy):
+            return jnp.any((self.x[None, :] == qx[:, None]) &
+                           (self.y[None, :] == qy[:, None]), axis=1)
+
+        def _knn(qx, qy, k):
+            @jax.jit
+            def go(qx, qy):
+                d2 = ((self.x[None, :] - qx[:, None]) ** 2 +
+                      (self.y[None, :] - qy[:, None]) ** 2)
+                return jax.lax.top_k(-d2, k)
+            return go(qx, qy)
+
+        @jax.jit
+        def _join(polys, n_edges):
+            from repro.core.queries import point_in_polygon
+
+            def one(poly, ne):
+                return jnp.sum(point_in_polygon(
+                    self.x, self.y, poly, ne).astype(jnp.int32))
+
+            return jax.lax.map(lambda a: one(*a), (polys, n_edges))
+
+        self.range_count = _range
+        self.point_query = _point
+        self.knn = _knn
+        self.join_count = _join
+
+
+class BinSearchEngine:
+    """Sorted keys + searchsorted: no partitioning, no learned model."""
+
+    def __init__(self, x, y, spec):
+        from repro.core import keys as K
+        keys = K.make_keys(jnp.asarray(x), jnp.asarray(y), spec)
+        order = jnp.argsort(keys)
+        self.keys_f = K.keys_to_f32(keys[order])
+        self.x = jnp.asarray(x)[order]
+        self.y = jnp.asarray(y)[order]
+        self.spec = spec
+
+        @jax.jit
+        def _range(rects, klo, khi):
+            s = jnp.searchsorted(self.keys_f, klo)
+            e = jnp.searchsorted(self.keys_f, khi + 1.0)
+            pos = jnp.arange(self.keys_f.shape[0])
+            m = ((pos[None, :] >= s[:, None]) &
+                 (pos[None, :] < e[:, None]) &
+                 (self.x[None, :] >= rects[:, 0:1]) &
+                 (self.x[None, :] <= rects[:, 2:3]) &
+                 (self.y[None, :] >= rects[:, 1:2]) &
+                 (self.y[None, :] <= rects[:, 3:4]))
+            return jnp.sum(m.astype(jnp.int32), axis=1)
+
+        self._range = _range
+
+    def range_count(self, rects):
+        from repro.core import keys as K
+        klo, khi = K.rect_key_range(jnp.asarray(rects), self.spec)
+        return self._range(jnp.asarray(rects), K.keys_to_f32(klo),
+                           K.keys_to_f32(khi))
+
+
+class GridOnlyEngine:
+    """Partition pruning + full per-partition refine (no spline)."""
+
+    def __init__(self, index):
+        import dataclasses
+        from repro.core.engine import SpatialEngine
+        # learned bounds replaced by the full row: emulate by setting the
+        # radix/spline to predict [0, count) always — probe the engine
+        # with an index whose learned interval is the whole partition.
+        idx2 = dataclasses.replace(
+            index,
+            knot_keys=jnp.stack(
+                [jnp.full((index.num_partitions,), -1.0, jnp.float32),
+                 jnp.full((index.num_partitions,), 3e38, jnp.float32)],
+            axis=1),
+            knot_pos=jnp.stack(
+                [jnp.zeros((index.num_partitions,), jnp.float32),
+                 index.count.astype(jnp.float32)], axis=1),
+            n_knots=jnp.full((index.num_partitions,), 2, jnp.int32),
+            radix_table=jnp.zeros_like(index.radix_table),
+            radix_kmin=jnp.full((index.num_partitions,), -1.0,
+                                jnp.float32),
+            radix_scale=jnp.zeros((index.num_partitions,), jnp.float32),
+            probe=index.n_pad,
+        )
+        self.eng = SpatialEngine(idx2)
+
+    def __getattr__(self, name):
+        return getattr(self.eng, name)

@@ -1,0 +1,84 @@
+"""Roofline report: aggregates results/dryrun/*.json into the §Roofline
+table (one row per arch x shape x mesh) — markdown + CSV."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+OUT_MD = "results/roofline.md"
+OUT_CSV = "results/roofline.csv"
+
+
+def load_all(pattern=None):
+    sources = ([pattern] if pattern else
+               ["results/dryrun/*.json",
+                "results/dryrun_opt/*.json",
+                "results/dryrun_spatial/*.json"])
+    rows = []
+    for pat in sources:
+        variant = ("optimized" if "opt" in pat else
+                   "spatial" if "spatial" in pat else "baseline")
+        for path in sorted(glob.glob(pat)):
+            with open(path) as f:
+                rep = json.load(f)
+            r = rep["roofline"]
+            rows.append({
+                "variant": variant,
+                "arch": rep["arch"], "shape": rep["shape"],
+                "mesh": rep["mesh"], "chips": rep["chips"],
+                "tc": r["t_compute_s"], "tm": r["t_memory_s"],
+                "tl": r["t_collective_s"],
+                "bottleneck": r["bottleneck"],
+                "useful": r["useful_flops_frac"],
+                "roofline_frac": r["roofline_frac"],
+                "params": rep.get("params", 0),
+                "active": rep.get("active_params", 0),
+                "flops_per_chip": r["flops"],
+                "hbm_per_chip": r["hbm_bytes"],
+                "link_per_chip": r["link_bytes"],
+            })
+    return rows
+
+
+def main():
+    rows = load_all()
+    if not rows:
+        print("roofline,0,no dryrun results found")
+        return
+    os.makedirs("results", exist_ok=True)
+    hdr = ("| variant | arch | shape | mesh | t_comp (s) | t_mem (s) "
+           "| t_coll (s) | bound | useful | roofline |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    csv = ["variant,arch,shape,mesh,chips,t_compute_s,t_memory_s,"
+           "t_collective_s,bottleneck,useful_flops_frac,roofline_frac"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"],
+                                         r["mesh"], r["variant"])):
+        lines.append(
+            f"| {r['variant']} | {r['arch']} | {r['shape']} "
+            f"| {r['mesh']} "
+            f"| {r['tc']:.2e} | {r['tm']:.2e} | {r['tl']:.2e} "
+            f"| {r['bottleneck']} | {r['useful']:.2f} "
+            f"| {r['roofline_frac']:.3f} |")
+        csv.append(
+            f"{r['variant']},{r['arch']},{r['shape']},{r['mesh']},"
+            f"{r['chips']},"
+            f"{r['tc']:.4e},{r['tm']:.4e},{r['tl']:.4e},"
+            f"{r['bottleneck']},{r['useful']:.3f},"
+            f"{r['roofline_frac']:.4f}")
+    with open(OUT_MD, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    with open(OUT_CSV, "w") as f:
+        f.write("\n".join(csv) + "\n")
+    # run.py-compatible summary rows
+    worst = min(rows, key=lambda r: r["roofline_frac"])
+    print(f"roofline/cells,{len(rows)},table at {OUT_MD}")
+    print(f"roofline/worst,{worst['roofline_frac']:.4f},"
+          f"{worst['arch']}/{worst['shape']}/{worst['mesh']}")
+    colls = [r for r in rows if r["bottleneck"] == "collective"]
+    print(f"roofline/collective-bound,{len(colls)},of {len(rows)} cells")
+
+
+if __name__ == "__main__":
+    main()

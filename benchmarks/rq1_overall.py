@@ -1,0 +1,88 @@
+"""RQ1 (paper Fig. 4): overall performance, LiLIS vs baselines.
+
+Four query types under default settings (selectivity 1e-5 skewed rects,
+k=10) against fullscan (~Spark), binsearch (sort-only), gridonly
+(~Sedona-N two-phase) — all on the same JAX substrate.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (BENCH_N, BENCH_Q, BinSearchEngine,
+                               FullScanEngine, GridOnlyEngine, emit,
+                               timeit)
+from repro.core import SpatialEngine, build_index, fit
+from repro.data import spatial as ds
+
+
+def main():
+    x, y = ds.make("taxi", BENCH_N, seed=0)
+    part = fit("kdtree", x, y, 64, seed=0)
+    index = build_index(x, y, part)
+    lilis = SpatialEngine(index)
+    grid = GridOnlyEngine(index)
+    full = FullScanEngine(x, y)
+    bins = BinSearchEngine(x, y, index.key_spec)
+
+    rng = np.random.default_rng(1)
+    ix = rng.integers(0, BENCH_N, BENCH_Q)
+    qx, qy = x[ix], y[ix]
+    rects = ds.random_rects(BENCH_Q, 1e-5, part.bounds, seed=2,
+                            centers=(x, y))
+    polys, ne = ds.random_polygons(16, part.bounds, seed=3)
+
+    q = BENCH_Q
+    emit("rq1/point/lilis", timeit(lambda: lilis.point_query(qx, qy)) / q)
+    emit("rq1/point/gridonly", timeit(lambda: grid.point_query(qx, qy))
+         / q)
+    emit("rq1/point/fullscan", timeit(lambda: full.point_query(qx, qy))
+         / q)
+
+    emit("rq1/range/lilis",
+         timeit(lambda: lilis.range_query(rects)[0]) / q)
+    emit("rq1/range/gridonly",
+         timeit(lambda: grid.range_count(rects)) / q)
+    emit("rq1/range/binsearch",
+         timeit(lambda: bins.range_count(rects)) / q)
+    emit("rq1/range/fullscan",
+         timeit(lambda: full.range_count(rects)) / q)
+
+    k = 10
+    emit("rq1/knn/lilis",
+         timeit(lambda: lilis.knn(qx, qy, k, mode="pruned")[0]) / q)
+    emit("rq1/knn/gridonly",
+         timeit(lambda: grid.knn(qx, qy, k, mode="exact")[0]) / q)
+    emit("rq1/knn/fullscan", timeit(lambda: full.knn(qx, qy, k)[0]) / q)
+
+    emit("rq1/join/lilis",
+         timeit(lambda: lilis.join_count(polys, ne)) / 16)
+    emit("rq1/join/fullscan",
+         timeit(lambda: full.join_count(polys, ne)) / 16)
+
+    # scaling row: the learned-index gap grows with N (paper's regime is
+    # billions of rows on a cluster; 1M on one core shows the trend)
+    n2 = 1_000_000
+    x2, y2 = ds.make("taxi", n2, seed=0)
+    part2 = fit("kdtree", x2, y2, 256, seed=0)
+    eng2 = SpatialEngine(build_index(x2, y2, part2))
+    full2 = FullScanEngine(x2, y2)
+    ix2 = rng.integers(0, n2, BENCH_Q)
+    qx2, qy2 = x2[ix2], y2[ix2]
+    rects2 = ds.random_rects(BENCH_Q, 1e-5, part2.bounds, seed=2,
+                             centers=(x2, y2))
+    emit("rq1/range@1M/lilis",
+         timeit(lambda: eng2.range_query(rects2)[0]) / q)
+    emit("rq1/range@1M/fullscan",
+         timeit(lambda: full2.range_count(rects2)) / q)
+    emit("rq1/knn@1M/lilis",
+         timeit(lambda: eng2.knn(qx2, qy2, 10)[0]) / q)
+    emit("rq1/knn@1M/fullscan",
+         timeit(lambda: full2.knn(qx2, qy2, 10)[0]) / q)
+    emit("rq1/point@1M/lilis",
+         timeit(lambda: eng2.point_query(qx2, qy2)) / q)
+    emit("rq1/point@1M/fullscan",
+         timeit(lambda: full2.point_query(qx2, qy2)) / q)
+
+
+if __name__ == "__main__":
+    main()

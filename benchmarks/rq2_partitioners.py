@@ -1,0 +1,39 @@
+"""RQ2 (paper Table 3): LiLIS-{F,A,Q,K,R} partitioner sweep."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BENCH_N, BENCH_Q, emit, timeit
+from repro.core import STRATEGIES, SpatialEngine, build_index, fit
+from repro.data import spatial as ds
+
+TAGS = {"fixed": "F", "adaptive": "A", "quadtree": "Q", "kdtree": "K",
+        "rtree": "R"}
+
+
+def main():
+    x, y = ds.make("taxi", BENCH_N, seed=0)
+    rng = np.random.default_rng(1)
+    ix = rng.integers(0, BENCH_N, BENCH_Q)
+    qx, qy = x[ix], y[ix]
+    q = BENCH_Q
+
+    for kind in STRATEGIES:
+        part = fit(kind, x, y, 64, seed=0)
+        eng = SpatialEngine(build_index(x, y, part))
+        rects = ds.random_rects(BENCH_Q, 1e-5, part.bounds, seed=2,
+                                centers=(x, y))
+        polys, ne = ds.random_polygons(8, part.bounds, seed=3)
+        tag = TAGS[kind]
+        emit(f"rq2/point/LiLIS-{tag}",
+             timeit(lambda: eng.point_query(qx, qy)) / q)
+        emit(f"rq2/range/LiLIS-{tag}",
+             timeit(lambda: eng.range_query(rects)[0]) / q)
+        emit(f"rq2/knn/LiLIS-{tag}",
+             timeit(lambda: eng.knn(qx, qy, 10)[0]) / q)
+        emit(f"rq2/join/LiLIS-{tag}",
+             timeit(lambda: eng.join_count(polys, ne)) / 8)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""RQ3 (paper Fig. 5 + Table 4): dataset sweep.
+
+uniform ~ SYN, gaussian ~ CHI, taxi ~ NYC. Table-4 comparison: LiLIS-K
+vs the full-scan baseline for kNN on every dataset.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (BENCH_N, BENCH_Q, FullScanEngine, emit,
+                               timeit)
+from repro.core import SpatialEngine, build_index, fit
+from repro.data import spatial as ds
+
+
+def main():
+    for gen in ["uniform", "gaussian", "taxi"]:
+        x, y = ds.make(gen, BENCH_N, seed=0)
+        part = fit("kdtree", x, y, 64, seed=0)
+        eng = SpatialEngine(build_index(x, y, part))
+        full = FullScanEngine(x, y)
+        rng = np.random.default_rng(1)
+        ix = rng.integers(0, BENCH_N, BENCH_Q)
+        qx, qy = x[ix], y[ix]
+        rects = ds.random_rects(BENCH_Q, 1e-5, part.bounds, seed=2,
+                                centers=(x, y))
+        q = BENCH_Q
+        emit(f"rq3/point/{gen}",
+             timeit(lambda: eng.point_query(qx, qy)) / q)
+        emit(f"rq3/range/{gen}",
+             timeit(lambda: eng.range_query(rects)[0]) / q)
+        emit(f"rq3/knn/{gen}", timeit(lambda: eng.knn(qx, qy, 10)[0]) / q)
+        emit(f"rq3/knn-fullscan/{gen}",
+             timeit(lambda: full.knn(qx, qy, 10)[0]) / q)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""RQ4b (paper Fig. 7): kNN k-sweep across LiLIS partitioner variants."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BENCH_N, emit, timeit
+from repro.core import SpatialEngine, build_index, fit
+from repro.data import spatial as ds
+
+TAGS = {"fixed": "F", "quadtree": "Q", "kdtree": "K", "rtree": "R"}
+
+
+def main():
+    x, y = ds.make("taxi", BENCH_N, seed=0)
+    rng = np.random.default_rng(1)
+    nq = 32
+    ix = rng.integers(0, BENCH_N, nq)
+    qx, qy = x[ix], y[ix]
+    engines = {}
+    for kind, tag in TAGS.items():
+        part = fit(kind, x, y, 64, seed=0)
+        engines[tag] = SpatialEngine(build_index(x, y, part))
+    for k in [1, 10, 50, 100]:
+        for tag, eng in engines.items():
+            emit(f"rq4/knn-k/LiLIS-{tag}/k={k}",
+                 timeit(lambda: eng.knn(qx, qy, k)[0]) / nq)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""RQ4a (paper Fig. 6): range-query selectivity x skewness sweep."""
+from __future__ import annotations
+
+from benchmarks.common import BENCH_N, BENCH_Q, emit, timeit
+from repro.core import SpatialEngine, build_index, fit
+from repro.data import spatial as ds
+
+
+def main():
+    x, y = ds.make("taxi", BENCH_N, seed=0)
+    part = fit("kdtree", x, y, 64, seed=0)
+    eng = SpatialEngine(build_index(x, y, part))
+    q = BENCH_Q
+    for sel in [1e-8, 1e-7, 1e-6, 1e-5, 1e-4, 1e-3]:
+        skewed = ds.random_rects(q, sel, part.bounds, seed=3,
+                                 centers=(x, y))
+        uniform = ds.random_rects(q, sel, part.bounds, seed=3)
+        emit(f"rq4/range-skewed/sel={sel:g}",
+             timeit(lambda: eng.range_query(skewed)[0]) / q)
+        emit(f"rq4/range-uniform/sel={sel:g}",
+             timeit(lambda: eng.range_query(uniform)[0]) / q)
+
+
+if __name__ == "__main__":
+    main()

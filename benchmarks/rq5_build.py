@@ -1,0 +1,100 @@
+"""RQ5 (paper Fig. 8): index construction cost.
+
+Compares, over identical pre-partitioned data:
+  * LiLIS local learned index: per-partition spline + radix fit
+    (the paper's O(N) one-pass after the sort),
+  * STR R-tree local index packing (the Sedona-style comparator,
+    O(N log N + N log f * log_f N)),
+  * a sort-only lower bound,
+plus the end-to-end build (assign + shuffle + fit).
+
+Both comparators run single-threaded on the same CPU (the paper's
+cluster comparison collapses to per-core build throughput here).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import BENCH_N, emit, timeit
+from repro.core import build_index, fit
+from repro.core import keys as K
+from repro.core.build import fit_partitions
+from repro.data import spatial as ds
+
+
+def str_pack(xs, ys, fanout=64):
+    """STR R-tree packing (numpy, bottom-up leaf + internal levels)."""
+    n = len(xs)
+    order = np.argsort(xs, kind="stable")
+    xs, ys = xs[order], ys[order]
+    s = int(np.ceil(np.sqrt(n / fanout)))
+    per = int(np.ceil(n / s))
+    boxes = []
+    for i in range(0, n, per):
+        cx, cy = xs[i:i + per], ys[i:i + per]
+        o2 = np.argsort(cy, kind="stable")
+        cx, cy = cx[o2], cy[o2]
+        for j in range(0, len(cx), fanout):
+            tx, ty = cx[j:j + fanout], cy[j:j + fanout]
+            boxes.append((tx.min(), ty.min(), tx.max(), ty.max()))
+    boxes = np.asarray(boxes, np.float32)
+    # internal levels
+    while len(boxes) > 1:
+        nxt = []
+        for j in range(0, len(boxes), fanout):
+            b = boxes[j:j + fanout]
+            nxt.append((b[:, 0].min(), b[:, 1].min(), b[:, 2].max(),
+                        b[:, 3].max()))
+        boxes = np.asarray(nxt, np.float32)
+    return boxes
+
+
+def main():
+    x, y = ds.make("taxi", BENCH_N, seed=0)
+    part = fit("kdtree", x, y, 64, seed=0)
+
+    # end-to-end distributed build (assign + sort/shuffle + learn)
+    emit("rq5/build/lilis-end2end",
+         timeit(lambda: build_index(x, y, part).key, repeat=3))
+
+    # isolate the LOCAL index fit on identical layouted data
+    idx = build_index(x, y, part)
+    key_g, counts = idx.key, idx.count
+    m_pad = idx.knot_keys.shape[1]
+    emit("rq5/build/lilis-local-fit",
+         timeit(lambda: fit_partitions(
+             key_g, counts, eps=idx.eps, m_pad=m_pad,
+             radix_bits=idx.radix_bits)["n_knots"], repeat=3))
+
+    # STR R-tree packing over the same points (per partition)
+    xs_np = np.asarray(idx.x)
+    ys_np = np.asarray(idx.y)
+    cnts = np.asarray(counts)
+
+    def build_str():
+        for p in range(idx.num_partitions):
+            c = cnts[p]
+            if c:
+                str_pack(xs_np[p, :c], ys_np[p, :c])
+
+    t0 = time.perf_counter()
+    build_str()
+    emit("rq5/build/rtree-str-local", (time.perf_counter() - t0) * 1e6)
+
+    # sort-only lower bound
+    keys = K.make_keys(jax.numpy.asarray(x), jax.numpy.asarray(y),
+                       idx.key_spec)
+    emit("rq5/build/sort-only",
+         timeit(lambda: jax.numpy.sort(keys), repeat=3))
+
+    sizes = idx.size_bytes()
+    emit("rq5/size/local-model-bytes", sizes["local_model"],
+         f"data={BENCH_N * 12}")
+    emit("rq5/size/global-index-bytes", sizes["global_index"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark suite entry: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only rq1,...]``
+Emits ``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = ["rq1_overall", "rq2_partitioners", "rq3_datasets",
+           "rq4_selectivity", "rq4_knn_k", "rq5_build", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module prefixes")
+    args = ap.parse_args()
+    picked = MODULES
+    if args.only:
+        pre = args.only.split(",")
+        picked = [m for m in MODULES if any(m.startswith(p) for p in pre)]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in picked:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+            print(f"# {name} done in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: build a LiLIS learned spatial index and query it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import SpatialEngine, build_index, fit
+from repro.data import spatial as ds
+
+
+def main():
+    # 1. a synthetic "city" of 200k points
+    x, y = ds.make("taxi", 200_000, seed=0)
+
+    # 2. spatial-aware partitioning (paper §3.1; KD-tree is the default)
+    part = fit("kdtree", x, y, num_partitions=64)
+
+    # 3. one-pass learned index build (paper §3.2)
+    index = build_index(x, y, part)
+    sizes = index.size_bytes()
+    print(f"index: {index.num_partitions} partitions, "
+          f"model {sizes['local_model']/1e3:.0f} KB for "
+          f"{len(x)*12/1e6:.0f} MB of points")
+
+    engine = SpatialEngine(index)
+
+    # point query (paper §4.1)
+    found = engine.point_query(x[:4], y[:4])
+    print("point query (known points):", np.asarray(found))
+
+    # range query (paper §4.2)
+    rects = ds.random_rects(8, 1e-4, part.bounds, seed=1, centers=(x, y))
+    counts = engine.range_count(rects)
+    print("range counts:", np.asarray(counts))
+
+    # kNN (paper §4.3)
+    d2, ids = engine.knn(x[:4], y[:4], k=5)
+    print("knn ids[0]:", np.asarray(ids)[0])
+
+    # spatial join (paper §4.4)
+    polys, n_edges = ds.random_polygons(4, part.bounds, seed=2)
+    print("join counts:", np.asarray(engine.join_count(polys, n_edges)))
+
+
+if __name__ == "__main__":
+    main()

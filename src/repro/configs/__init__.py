@@ -1,0 +1,35 @@
+"""Assigned architecture configs (+ the paper's own spatial workloads).
+
+Each module exposes ``config()`` (full published size) and
+``smoke_config()`` (same family, reduced dims, CPU-testable). The
+registry maps ``--arch <id>`` strings used by launch/ and benchmarks/.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "deepseek_v2_lite_16b",
+    "dbrx_132b",
+    "rwkv6_3b",
+    "minicpm3_4b",
+    "internlm2_20b",
+    "qwen2_5_3b",
+    "gemma3_4b",
+    "seamless_m4t_medium",
+    "hymba_1_5b",
+    "phi_3_vision_4_2b",
+]
+
+# canonical dashed ids (CLI) -> module names
+def _mod_name(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str, smoke: bool = False):
+    mod = importlib.import_module(f"repro.configs.{_mod_name(arch_id)}")
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def all_arch_ids():
+    return [a.replace("_", "-") for a in ARCHS]

@@ -1,0 +1,16 @@
+"""LiLIS core: the paper's primary contribution in JAX.
+
+Public API:
+  KeySpec, make_keys           — 1-D key projection (morton / axis)
+  build_spline, build_radix    — error-bounded spline + float radix table
+  Partitioner, fit             — spatial-aware partitioners (5 strategies)
+  build_index                  — distributed index build pipeline
+  LearnedSpatialIndex          — the index pytree
+  SpatialEngine                — distributed two-phase query engine
+"""
+from repro.core.keys import KeySpec, make_keys  # noqa: F401
+from repro.core.spline import build_spline, spline_predict  # noqa: F401
+from repro.core.radix import build_radix, radix_locate  # noqa: F401
+from repro.core.partitioner import Partitioner, fit, STRATEGIES  # noqa: F401
+from repro.core.build import LearnedSpatialIndex, build_index  # noqa: F401
+from repro.core.engine import SpatialEngine, EngineConfig  # noqa: F401

@@ -1,0 +1,391 @@
+"""Local (per-partition) query algorithms (paper §4), vectorized.
+
+TPU adaptation (DESIGN.md §2): the paper's per-query control flow becomes
+batched fixed-shape masked compute. Each primitive below operates on ONE
+partition's arrays and a BATCH of queries; engine.py vmaps over partitions
+and adds the global (partitioner) pruning + collectives.
+
+Exactness contract: ``probe`` (static, chosen at build from eps + the
+longest duplicate run) guarantees the true lower bound lies strictly
+inside every probe window, so windowed counting reproduces exact
+``searchsorted`` semantics — property-tested against oracles.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import keys as K
+from repro.core import radix as R
+
+F32_BIG = jnp.float32(3.0e38)
+
+
+# ---------------------------------------------------------------------------
+# learned search primitive (paper Fig. 3: radix -> spline -> bounded probe)
+# ---------------------------------------------------------------------------
+
+def learned_lower_bound(part, qkf, *, radix_bits: int, probe: int):
+    """Exact lower_bound (first idx with key >= q) for a batch of queries.
+
+    part: dict with keys_f (n_pad,), knot_keys (m,), knot_pos (m,),
+          n_knots (), radix_table (2^b+2,), radix_kmin (), radix_scale (),
+          count ().
+    qkf:  (Q,) float32 query keys.
+    Returns (Q,) int32 positions in [0, count].
+    """
+    n_pad = part["keys_f"].shape[0]
+    radix = {"table": part["radix_table"], "kmin": part["radix_kmin"],
+             "scale": part["radix_scale"]}
+    lo, hi = R.radix_locate(radix, qkf, part["n_knots"], bits=radix_bits)
+    seg = R.windowed_segment_search(part["knot_keys"], qkf, lo, hi)
+    k0 = part["knot_keys"][seg]
+    k1 = part["knot_keys"][jnp.minimum(seg + 1, part["knot_keys"].shape[0] - 1)]
+    p0 = part["knot_pos"][seg]
+    p1 = part["knot_pos"][jnp.minimum(seg + 1, part["knot_pos"].shape[0] - 1)]
+    t = jnp.clip((qkf - k0) / jnp.maximum(k1 - k0, 1e-30), 0.0, 1.0)
+    phat = p0 + t * (p1 - p0)
+
+    start = jnp.clip(jnp.round(phat).astype(jnp.int32) - probe // 2,
+                     0, n_pad - probe)
+
+    def one(s, q):
+        win = jax.lax.dynamic_slice(part["keys_f"], (s,), (probe,))
+        return s + jnp.sum((win < q).astype(jnp.int32))
+
+    pos = jax.vmap(one)(start, qkf)
+    return jnp.minimum(pos, part["count"])
+
+
+def learned_bounds(part, klo_f, khi_f, *, radix_bits: int, probe: int):
+    """[s, e) covering all keys in [klo, khi] (integer-key semantics)."""
+    s = learned_lower_bound(part, klo_f, radix_bits=radix_bits, probe=probe)
+    e = learned_lower_bound(part, khi_f + 1.0, radix_bits=radix_bits,
+                            probe=probe)
+    return s, e
+
+
+# ---------------------------------------------------------------------------
+# point query (paper Alg. 3)
+# ---------------------------------------------------------------------------
+
+def point_query_partition(part, qkf, qx, qy, *, radix_bits: int, probe: int):
+    """(found (Q,), vid (Q,)) — exact membership within one partition.
+
+    The probe window is sized to contain the ENTIRE duplicate-key run, so
+    the paper's bidirectional scan (Alg. 3 lines 6-19) collapses into one
+    masked window reduction.
+    """
+    n_pad = part["keys_f"].shape[0]
+    pos_hint = learned_lower_bound(part, qkf, radix_bits=radix_bits,
+                                   probe=probe)
+    start = jnp.clip(pos_hint - probe // 2, 0, n_pad - probe)
+
+    def one(s, q, ax, ay):
+        wk = jax.lax.dynamic_slice(part["keys_f"], (s,), (probe,))
+        wx = jax.lax.dynamic_slice(part["x"], (s,), (probe,))
+        wy = jax.lax.dynamic_slice(part["y"], (s,), (probe,))
+        wv = jax.lax.dynamic_slice(part["vid"], (s,), (probe,))
+        m = (wk == q) & (wx == ax) & (wy == ay)
+        found = jnp.any(m)
+        vid = jnp.where(found, wv[jnp.argmax(m)], -1)
+        return found, vid
+
+    return jax.vmap(one)(start, qkf, qx, qy)
+
+
+# ---------------------------------------------------------------------------
+# range query (paper §4.2)
+# ---------------------------------------------------------------------------
+
+def range_count_partition(part, rects, klo_f, khi_f, *, radix_bits: int,
+                          probe: int, active=None):
+    """Exact in-rect counts (Q,) for one partition.
+
+    Uses the learned [s, e) key-interval as position mask (the paper's
+    filter phase) + coordinate refine. ``active`` (Q,) optionally masks
+    queries whose global filter already rejected this partition.
+    """
+    n_pad = part["keys_f"].shape[0]
+    s, e = learned_bounds(part, klo_f, khi_f, radix_bits=radix_bits,
+                          probe=probe)
+    posn = jnp.arange(n_pad, dtype=jnp.int32)
+    valid = posn < part["count"]
+    inpos = (posn[None, :] >= s[:, None]) & (posn[None, :] < e[:, None])
+    xl, yl, xh, yh = (rects[:, 0:1], rects[:, 1:2], rects[:, 2:3],
+                      rects[:, 3:4])
+    inrect = ((part["x"][None, :] >= xl) & (part["x"][None, :] <= xh) &
+              (part["y"][None, :] >= yl) & (part["y"][None, :] <= yh))
+    m = valid[None, :] & inpos & inrect
+    if active is not None:
+        m = m & active[:, None]
+    return jnp.sum(m.astype(jnp.int32), axis=1), m
+
+
+def range_window_partition(part, rects, klo_f, khi_f, *, radix_bits: int,
+                           probe: int, cap: int, active=None):
+    """Windowed fast path: gather only [s, s+cap) candidates per query.
+
+    Returns (counts (Q,), vids (Q, cap) int32 padded -1, ok (Q,) bool —
+    False when the learned interval exceeded ``cap`` and the caller must
+    fall back / re-run with a larger cap). This is the path whose work is
+    proportional to the LEARNED interval, not the partition size — the
+    measurable learned-index advantage on CPU benchmarks and the block-skip
+    structure the Pallas kernel exploits on TPU.
+    """
+    n_pad = part["keys_f"].shape[0]
+    s, e = learned_bounds(part, klo_f, khi_f, radix_bits=radix_bits,
+                          probe=probe)
+    ok = (e - s) <= cap
+    start = jnp.clip(s, 0, jnp.maximum(n_pad - cap, 0))
+
+    def one(s0, st, en, rect):
+        wx = jax.lax.dynamic_slice(part["x"], (s0,), (cap,))
+        wy = jax.lax.dynamic_slice(part["y"], (s0,), (cap,))
+        wv = jax.lax.dynamic_slice(part["vid"], (s0,), (cap,))
+        posn = s0 + jnp.arange(cap, dtype=jnp.int32)
+        m = ((posn >= st) & (posn < en) & (posn < part["count"]) &
+             (wx >= rect[0]) & (wx <= rect[2]) &
+             (wy >= rect[1]) & (wy <= rect[3]))
+        return jnp.sum(m.astype(jnp.int32)), jnp.where(m, wv, -1)
+
+    counts, vids = jax.vmap(one)(start, s, e, rects)
+    if active is not None:
+        counts = jnp.where(active, counts, 0)
+        vids = jnp.where(active[:, None], vids, -1)
+        ok = ok | ~active
+    return counts, vids, ok
+
+
+# ---------------------------------------------------------------------------
+# query-centric primitives: operate on (Q, C) CANDIDATE partitions only
+# (phase-1 pruning makes the work proportional to candidates, not to the
+# total partition count — the paper's "at most one/few partitions per
+# query" property).
+# ---------------------------------------------------------------------------
+
+def lower_bound_at(parts, pid, qkf, *, radix_bits: int, probe: int):
+    """Exact lower_bound against partition ``pid`` per element.
+
+    parts: full engine dict ((P, ...) arrays); pid, qkf: (...,) matching
+    shapes. Vectorized with vmap; each element gathers only that
+    partition's knot row + probe window. The compacted knot rows are
+    small (<= a few hundred), so a full branchless compare-count beats
+    gathering the (2^b + 2)-entry radix row — the radix table pays off
+    only in the partition-resident Pallas kernel (kernels/spline_search)
+    where it is already in VMEM; documented in DESIGN.md §5.
+    """
+    del radix_bits
+    n_pad = parts["keys_f"].shape[1]
+    m = parts["knot_keys"].shape[1]
+
+    def one(p, q):
+        krow = jax.lax.dynamic_slice(parts["knot_keys"], (p, 0),
+                                     (1, m))[0]
+        prow = jax.lax.dynamic_slice(parts["knot_pos"], (p, 0), (1, m))[0]
+        cnt = parts["count"][p]
+        # branchless segment locate over the whole (padded +inf) row
+        succ = jnp.sum((krow < q).astype(jnp.int32))
+        seg = jnp.clip(succ - 1, 0, m - 2)
+        k0 = krow[seg]
+        k1 = krow[seg + 1]
+        p0 = prow[seg]
+        p1 = prow[seg + 1]
+        t = jnp.clip((q - k0) / jnp.maximum(k1 - k0, 1e-30), 0.0, 1.0)
+        phat = p0 + t * (p1 - p0)
+        start = jnp.clip(jnp.round(phat).astype(jnp.int32) - probe // 2,
+                         0, n_pad - probe)
+        win = jax.lax.dynamic_slice(parts["keys_f"], (p, start),
+                                    (1, probe))[0]
+        return jnp.minimum(start + jnp.sum((win < q).astype(jnp.int32)),
+                           cnt)
+
+    flat_p = pid.reshape(-1)
+    flat_q = qkf.reshape(-1)
+    out = jax.vmap(one)(flat_p, flat_q)
+    return out.reshape(pid.shape)
+
+
+def bounds_on_rows(parts, pid, qk, *, probe: int):
+    """lower_bound for MULTIPLE keys per candidate partition, sharing
+    one knot/pos row gather per (query, candidate).
+
+    pid: (Q, C); qk: (Q, C, T) float32 keys. Returns (Q, C, T) int32.
+    """
+    qn, c, t = qk.shape
+    n_pad = parts["keys_f"].shape[1]
+    m = parts["knot_keys"].shape[1]
+
+    def one(p, qs):                       # qs: (T,)
+        krow = jax.lax.dynamic_slice(parts["knot_keys"], (p, 0),
+                                     (1, m))[0]
+        prow = jax.lax.dynamic_slice(parts["knot_pos"], (p, 0),
+                                     (1, m))[0]
+        cnt = parts["count"][p]
+        succ = jnp.sum((krow[None, :] < qs[:, None]).astype(jnp.int32),
+                       axis=1)
+        seg = jnp.clip(succ - 1, 0, m - 2)
+        k0 = krow[seg]
+        k1 = krow[seg + 1]
+        p0 = prow[seg]
+        p1 = prow[seg + 1]
+        tt = jnp.clip((qs - k0) / jnp.maximum(k1 - k0, 1e-30), 0.0, 1.0)
+        phat = p0 + tt * (p1 - p0)
+        start = jnp.clip(phat.astype(jnp.int32) - probe // 2, 0,
+                         n_pad - probe)
+
+        def probe_one(s0, q):
+            win = jax.lax.dynamic_slice(parts["keys_f"], (p, s0),
+                                        (1, probe))[0]
+            return s0 + jnp.sum((win < q).astype(jnp.int32))
+
+        pos = jax.vmap(probe_one)(start, qs)
+        return jnp.minimum(pos, cnt)
+
+    out = jax.vmap(one)(pid.reshape(-1),
+                        qk.reshape(-1, t))
+    return out.reshape(qn, c, t)
+
+
+def range_window_at(parts, bounds, pid, valid, rects, spec, *,
+                    cap: int, radix_bits: int, probe: int,
+                    z_depth: int = 2):
+    """Windowed range query against candidate partitions.
+
+    pid, valid: (Q, C); rects: (Q, 4). Returns
+    (counts (Q, C), vids (Q, C, cap), ok (Q, C)).
+    """
+    qn, c = pid.shape
+    n_pad = parts["keys_f"].shape[1]
+    boxes = bounds  # (Q, C, 4) candidate boxes, looked up by the caller
+    rect_e = jnp.broadcast_to(rects[:, None, :], (qn, c, 4))
+    xl = jnp.maximum(rect_e[..., 0], boxes[..., 0])
+    yl = jnp.maximum(rect_e[..., 1], boxes[..., 1])
+    xh = jnp.minimum(rect_e[..., 2], boxes[..., 2])
+    yh = jnp.minimum(rect_e[..., 3], boxes[..., 3])
+    nonempty = (xl <= xh) & (yl <= yh) & valid
+    from repro.core import keys as K
+    bx = spec.bounds
+    qxl = K.quantize(jnp.where(nonempty, xl, 0.0), bx[0], bx[2],
+                     spec.bits_per_dim)
+    qyl = K.quantize(jnp.where(nonempty, yl, 0.0), bx[1], bx[3],
+                     spec.bits_per_dim)
+    qxh = K.quantize(jnp.where(nonempty, xh, 0.0), bx[0], bx[2],
+                     spec.bits_per_dim)
+    qyh = K.quantize(jnp.where(nonempty, yh, 0.0), bx[1], bx[3],
+                     spec.bits_per_dim)
+    # z-interval decomposition: (Q, C, S) disjoint subintervals
+    zlo, zhi, pv = K.z_split_intervals(qxl, qyl, qxh, qyh, nonempty,
+                                       depth=z_depth)
+    sN = zlo.shape[-1]
+    klo = K.keys_to_f32(zlo)
+    khi = K.keys_to_f32(zhi)
+    pid_s = jnp.broadcast_to(pid[..., None], zlo.shape)
+    # gather each candidate's knot/pos row ONCE; all 2S bounds reuse it
+    qk2 = jnp.concatenate([klo, khi + 1.0], axis=-1)      # (Q, C, 2S)
+    pos2 = bounds_on_rows(parts, pid, qk2, probe=probe)
+    s = pos2[..., :sN]
+    e = pos2[..., sN:]
+    e = jnp.where(pv, e, s)
+    ok = jnp.all(((e - s) <= cap) | ~pv, axis=-1) | ~nonempty
+    st = jnp.clip(s, 0, jnp.maximum(n_pad - cap, 0))
+
+    def gather(p, s0, st_, en, rect, act):
+        wx = jax.lax.dynamic_slice(parts["x"], (p, s0), (1, cap))[0]
+        wy = jax.lax.dynamic_slice(parts["y"], (p, s0), (1, cap))[0]
+        wv = jax.lax.dynamic_slice(parts["vid"], (p, s0), (1, cap))[0]
+        posn = s0 + jnp.arange(cap, dtype=jnp.int32)
+        mask = ((posn >= st_) & (posn < en) &
+                (posn < parts["count"][p]) &
+                (wx >= rect[0]) & (wx <= rect[2]) &
+                (wy >= rect[1]) & (wy <= rect[3]) & act)
+        return (jnp.sum(mask.astype(jnp.int32)),
+                jnp.where(mask, wv, -1), wx, wy)
+
+    rect_s = jnp.broadcast_to(rect_e[:, :, None, :], (qn, c, sN, 4))
+    act_s = pv & nonempty[..., None]
+    cnts, vids, wx, wy = jax.vmap(gather)(
+        pid_s.reshape(-1), st.reshape(-1), s.reshape(-1), e.reshape(-1),
+        rect_s.reshape(-1, 4), act_s.reshape(-1))
+    # subintervals are DISJOINT, so per-candidate counts just add
+    return (jnp.sum(cnts.reshape(qn, c, sN), axis=-1),
+            vids.reshape(qn, c, sN * cap), ok,
+            wx.reshape(qn, c, sN * cap), wy.reshape(qn, c, sN * cap))
+
+
+# ---------------------------------------------------------------------------
+# geometry helpers
+# ---------------------------------------------------------------------------
+
+def clip_rect_to_box(rects, box):
+    """Intersect (Q, 4) rects with one partition box (4,).
+
+    The morton interval of the CLIPPED rect is dramatically tighter than
+    the global rect's interval (the Z-curve detours outside the
+    partition are cut off) — the partition-local filter phase works on
+    the clipped keys. Empty intersections produce inverted rects whose
+    key range is empty after the (klo > khi) guard.
+    """
+    xl = jnp.maximum(rects[:, 0], box[0])
+    yl = jnp.maximum(rects[:, 1], box[1])
+    xh = jnp.minimum(rects[:, 2], box[2])
+    yh = jnp.minimum(rects[:, 3], box[3])
+    return jnp.stack([xl, yl, xh, yh], axis=1)
+
+
+def clipped_key_range(rects, box, spec):
+    """Per-partition (klo_f, khi_f, nonempty) for clipped rects."""
+    from repro.core import keys as K
+    cl = clip_rect_to_box(rects, box)
+    nonempty = (cl[:, 0] <= cl[:, 2]) & (cl[:, 1] <= cl[:, 3])
+    safe = jnp.where(nonempty[:, None], cl,
+                     jnp.zeros_like(cl))
+    klo, khi = K.rect_key_range(safe, spec)
+    return (K.keys_to_f32(klo), K.keys_to_f32(khi), nonempty)
+
+
+def rect_overlaps_box(rects, boxes):
+    """(Q, P) — axis-aligned overlap test (global filter phase)."""
+    xl, yl, xh, yh = (rects[:, 0:1], rects[:, 1:2], rects[:, 2:3],
+                      rects[:, 3:4])
+    bxl, byl, bxh, byh = boxes[:, 0], boxes[:, 1], boxes[:, 2], boxes[:, 3]
+    return ((xl <= bxh) & (xh >= bxl) & (yl <= byh) & (yh >= byl))
+
+
+def point_in_box(qx, qy, boxes):
+    """(Q, P) containment of query points in partition boxes."""
+    return ((qx[:, None] >= boxes[:, 0]) & (qx[:, None] <= boxes[:, 2]) &
+            (qy[:, None] >= boxes[:, 1]) & (qy[:, None] <= boxes[:, 3]))
+
+
+def box_min_dist2(qx, qy, boxes):
+    """(Q, P) squared min distance from points to boxes (kNN pruning)."""
+    dx = jnp.maximum(jnp.maximum(boxes[:, 0] - qx[:, None],
+                                 qx[:, None] - boxes[:, 2]), 0.0)
+    dy = jnp.maximum(jnp.maximum(boxes[:, 1] - qy[:, None],
+                                 qy[:, None] - boxes[:, 3]), 0.0)
+    return dx * dx + dy * dy
+
+
+def point_in_polygon(px, py, poly, n_edges):
+    """Ray-casting parity test. px, py: (N,); poly: (E, 2); n_edges: ().
+
+    Returns (N,) bool. Edges are (poly[i], poly[i+1 mod n]); padding edges
+    (i >= n_edges) are skipped.
+    """
+    e_max = poly.shape[0]
+
+    def body(i, parity):
+        x1, y1 = poly[i, 0], poly[i, 1]
+        nxt = jnp.where(i + 1 >= n_edges, 0, i + 1)
+        x2, y2 = poly[nxt, 0], poly[nxt, 1]
+        cond = ((y1 > py) != (y2 > py))
+        t = (py - y1) / jnp.where(y2 == y1, 1e-30, y2 - y1)
+        xin = x1 + t * (x2 - x1)
+        crosses = cond & (px < xin) & (i < n_edges)
+        return parity ^ crosses
+
+    return jax.lax.fori_loop(0, e_max, body,
+                             jnp.zeros(px.shape, dtype=bool))

@@ -1,0 +1,158 @@
+"""Error-bounded greedy spline (paper §3.2, RadixSpline / Neumann-Michel).
+
+Given keys sorted ascending, fit a piecewise-linear spline S with
+``|S(key_i) - pos_i| <= eps`` for the FIRST occurrence position of every
+distinct key. Built in ONE sequential pass (``jax.lax.scan``) — the same
+one-pass property the paper claims for its O(N log N + N) build (sort +
+pass); the scan runs per-partition in parallel under vmap/shard_map,
+mirroring Spark's ``mapPartitions`` with no shuffle.
+
+Duplicate keys: like RadixSpline we fit the CDF over DISTINCT keys
+(first-occurrence rank). A query for any key k then satisfies
+``|S(k) - lower_bound(k)| <= eps + max_run`` where max_run is the longest
+run of equal keys (a run displaces the rank of the next distinct key).
+The build returns max_run so the probe window is chosen to keep every
+query EXACT (DESIGN.md §2 "fixed shapes, masked compute").
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.float32(-3.4e38)
+POS = jnp.float32(3.4e38)
+
+
+@partial(jax.jit, static_argnames=("m_pad", "eps"))
+def build_spline(keys_f32, valid, *, eps: int, m_pad: int):
+    """Fit the greedy corridor spline.
+
+    Args:
+      keys_f32: (N,) float32 keys, sorted ascending; padding entries must be
+        at the end and marked invalid.
+      valid:    (N,) bool.
+      eps:      position error bound (paper default 32).
+      m_pad:    knot capacity (static). Worst case needs one knot per
+        distinct key; callers size this and tests assert no overflow.
+
+    Returns dict with:
+      knot_keys: (m_pad,) f32, padded with +POS
+      knot_pos:  (m_pad,) f32
+      n_knots:   () int32
+      max_run:   () int32  longest duplicate-key run
+      overflow:  () bool   True if m_pad was exceeded (spline invalid)
+    """
+    n = keys_f32.shape[0]
+    pos = jnp.arange(n, dtype=jnp.float32)
+    prev = jnp.concatenate([jnp.full((1,), -1.0, jnp.float32), keys_f32[:-1]])
+    first_occ = valid & (keys_f32 != prev)
+
+    epsf = jnp.float32(eps)
+
+    def emit(knots_k, knots_p, cnt, k, p):
+        knots_k = jax.lax.dynamic_update_index_in_dim(
+            knots_k, k, jnp.minimum(cnt, m_pad - 1), 0)
+        knots_p = jax.lax.dynamic_update_index_in_dim(
+            knots_p, p, jnp.minimum(cnt, m_pad - 1), 0)
+        return knots_k, knots_p, cnt + 1
+
+    def step(carry, inp):
+        (kk, kp, lo, hi, px, pp, cnt, knots_k, knots_p, started) = carry
+        x, y, use = inp
+
+        def do(carry):
+            kk, kp, lo, hi, px, pp, cnt, knots_k, knots_p, started = carry
+
+            def first(_):
+                kk2, kp2 = x, y
+                knots_k2, knots_p2, cnt2 = emit(knots_k, knots_p, cnt, x, y)
+                return (kk2, kp2, NEG, POS, x, y, cnt2, knots_k2, knots_p2,
+                        jnp.bool_(True))
+
+            def rest(_):
+                dx = x - kk
+                s_lo = (y - epsf - kp) / dx
+                s_hi = (y + epsf - kp) / dx
+                inside = (s_lo <= hi) & (s_hi >= lo)
+
+                def tighten(_):
+                    return (kk, kp, jnp.maximum(lo, s_lo),
+                            jnp.minimum(hi, s_hi), x, y, cnt,
+                            knots_k, knots_p, started)
+
+                def new_knot(_):
+                    # Previous point becomes a knot; restart corridor from it.
+                    knots_k2, knots_p2, cnt2 = emit(knots_k, knots_p, cnt,
+                                                    px, pp)
+                    dx2 = x - px
+                    lo2 = (y - epsf - pp) / dx2
+                    hi2 = (y + epsf - pp) / dx2
+                    return (px, pp, lo2, hi2, x, y, cnt2,
+                            knots_k2, knots_p2, started)
+
+                return jax.lax.cond(inside, tighten, new_knot, None)
+
+            return jax.lax.cond(started, rest, first, None)
+
+        carry2 = jax.lax.cond(use, do, lambda c: c, carry)
+        return carry2, None
+
+    knots_k0 = jnp.full((m_pad,), POS, jnp.float32)
+    knots_p0 = jnp.zeros((m_pad,), jnp.float32)
+    init = (jnp.float32(0), jnp.float32(0), NEG, POS,
+            jnp.float32(0), jnp.float32(0), jnp.int32(0),
+            knots_k0, knots_p0, jnp.bool_(False))
+    (kk, kp, lo, hi, px, pp, cnt, knots_k, knots_p, started), _ = (
+        jax.lax.scan(step, init, (keys_f32, pos, first_occ)))
+
+    # Close the spline: last seen point becomes the final knot (unless it
+    # already is the only knot == first point with cnt==1 and px==kk).
+    need_tail = started & ((cnt == 1) | (px != kk))
+    knots_k, knots_p, cnt = jax.tree_util.tree_map(
+        lambda a, b: jnp.where(need_tail, a, b),
+        emit(knots_k, knots_p, cnt, px, pp), (knots_k, knots_p, cnt))
+
+    # Degenerate single-distinct-key partition: add a synthetic second knot
+    # so interpolation never divides by zero.
+    single = started & (cnt == 1)
+    knots_k, knots_p, cnt = jax.tree_util.tree_map(
+        lambda a, b: jnp.where(single, a, b),
+        emit(knots_k, knots_p, cnt, kk + 1.0, kp), (knots_k, knots_p, cnt))
+
+    # Longest run of equal keys among valid entries.
+    run_start = first_occ
+    run_id = jnp.cumsum(run_start.astype(jnp.int32)) - 1
+    run_id = jnp.where(valid, run_id, n)  # padding into a junk segment
+    ones = valid.astype(jnp.int32)
+    run_len = jax.ops.segment_sum(ones, run_id, num_segments=n + 1)[:-1]
+    max_run = jnp.max(run_len)
+
+    return {
+        "knot_keys": knots_k,
+        "knot_pos": knots_p,
+        "n_knots": jnp.minimum(cnt, m_pad),
+        "max_run": max_run.astype(jnp.int32),
+        "overflow": cnt > m_pad,
+    }
+
+
+def spline_predict(knot_keys, knot_pos, n_knots, query_f32):
+    """Interpolate predicted first-occurrence rank of ``query_f32``.
+
+    Vectorized over arbitrary query shape. Uses full binary search over the
+    knot array (O(log m_pad)); the radix table (radix.py) narrows this and
+    the Pallas kernel exploits the narrowing.
+    """
+    m_pad = knot_keys.shape[0]
+    # knots are padded with +POS so searchsorted stays in range.
+    seg = jnp.searchsorted(knot_keys, query_f32, side="right") - 1
+    seg = jnp.clip(seg, 0, jnp.maximum(n_knots - 2, 0))
+    k0 = knot_keys[seg]
+    k1 = knot_keys[seg + 1]
+    p0 = knot_pos[seg]
+    p1 = knot_pos[seg + 1]
+    t = (query_f32 - k0) / jnp.maximum(k1 - k0, 1e-30)
+    t = jnp.clip(t, 0.0, 1.0)
+    return p0 + t * (p1 - p0)

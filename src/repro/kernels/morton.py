@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: morton (Z-order) bit-interleave of quantized coords.
+
+Pure VPU elementwise op on uint32 lanes. Points are reshaped to
+(rows, LANE) and blocked (BLOCK_ROWS, LANE) in VMEM: 8x128 matches the
+TPU vreg tile for 32-bit lanes.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+BLOCK_ROWS = 8
+
+
+def _spread(v):
+    v = (v | (v << jnp.uint32(8))) & jnp.uint32(0x00FF00FF)
+    v = (v | (v << jnp.uint32(4))) & jnp.uint32(0x0F0F0F0F)
+    v = (v | (v << jnp.uint32(2))) & jnp.uint32(0x33333333)
+    v = (v | (v << jnp.uint32(1))) & jnp.uint32(0x55555555)
+    return v
+
+
+def _morton_kernel(qx_ref, qy_ref, out_ref):
+    x = qx_ref[...]
+    y = qy_ref[...]
+    out_ref[...] = _spread(x) | (_spread(y) << jnp.uint32(1))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def morton_encode_2d(qx, qy, *, interpret: bool):
+    """qx, qy: (rows, LANE) uint32 quantized coords -> morton keys."""
+    rows, lane = qx.shape
+    assert lane == LANE and rows % BLOCK_ROWS == 0
+    grid = (rows // BLOCK_ROWS,)
+    spec = pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0))
+    return pl.pallas_call(
+        _morton_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.uint32),
+        interpret=interpret,
+    )(qx, qy)

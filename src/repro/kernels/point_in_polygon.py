@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: ray-casting point-in-polygon (join refine phase).
+
+Grid over point blocks; the (small, broadcast) polygon vertex list stays
+whole in VMEM — the paper's broadcast-join structure. A fori_loop walks
+edges; each edge updates the crossing parity of the whole (1, NB) lane
+vector (VPU). Cost: E vector ops per block, E <= a few dozen.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NB = 512
+
+
+def _kernel(scal_ref, poly_ref, x_ref, y_ref, out_ref):
+    n_edges = scal_ref[0, 0].astype(jnp.int32)
+    e_max = poly_ref.shape[0]
+    px = x_ref[...]
+    py = y_ref[...]
+
+    def body(i, parity):
+        p1 = pl.load(poly_ref, (pl.ds(i, 1), slice(None)))      # (1, 2)
+        nxt = jnp.where(i + 1 >= n_edges, 0, i + 1)
+        p2 = pl.load(poly_ref, (pl.ds(nxt, 1), slice(None)))
+        x1, y1 = p1[0, 0], p1[0, 1]
+        x2, y2 = p2[0, 0], p2[0, 1]
+        cond = (y1 > py) != (y2 > py)
+        t = (py - y1) / jnp.where(y2 == y1, 1e-30, y2 - y1)
+        xin = x1 + t * (x2 - x1)
+        crosses = cond & (px < xin) & (i < n_edges)
+        return parity ^ crosses
+
+    parity = jax.lax.fori_loop(
+        0, e_max, body, jnp.zeros(px.shape, dtype=jnp.bool_))
+    out_ref[...] = parity.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def point_in_polygon(poly, n_edges_scalar, x, y, *, interpret: bool):
+    """poly: (E, 2) f32 ; n_edges_scalar: (1, 1) f32 ; x, y: (N,) f32.
+
+    Returns (N,) int32 inside flags.
+    """
+    n = x.shape[0]
+    e = poly.shape[0]
+    assert n % NB == 0
+    grid = (n // NB,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((e, 2), lambda i: (0, 0)),
+            pl.BlockSpec((1, NB), lambda i: (0, i)),
+            pl.BlockSpec((1, NB), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, NB), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.int32),
+        interpret=interpret,
+    )(n_edges_scalar, poly, x.reshape(1, -1), y.reshape(1, -1))
+    return out.reshape(-1)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (correctness references)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import keys as CK
+from repro.core import queries as CQ
+
+
+def morton_encode(qx, qy):
+    """(..., ) uint32 quantized coords -> morton keys."""
+    return CK.morton_encode(qx, qy)
+
+
+def spline_search(queries, knot_keys, knot_pos, radix_table, keys_f,
+                  kmin, scale, n_knots, count, *, probe, radix_bits):
+    """Exact lower-bound positions (first idx with key >= q)."""
+    part = {
+        "keys_f": keys_f, "knot_keys": knot_keys, "knot_pos": knot_pos,
+        "n_knots": jnp.asarray(n_knots, jnp.int32),
+        "radix_table": radix_table,
+        "radix_kmin": jnp.asarray(kmin, jnp.float32),
+        "radix_scale": jnp.asarray(scale, jnp.float32),
+        "count": jnp.asarray(count, jnp.int32),
+    }
+    return CQ.learned_lower_bound(part, queries, radix_bits=radix_bits,
+                                  probe=probe)
+
+
+def range_count(rects, se, count, x, y):
+    """(Q,) exact in-rect counts within [s, e) position intervals."""
+    n = x.shape[0]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    s = se[:, 0:1].astype(jnp.int32)
+    e = se[:, 1:2].astype(jnp.int32)
+    m = ((pos[None, :] >= s) & (pos[None, :] < e) &
+         (pos[None, :] < count) &
+         (x[None, :] >= rects[:, 0:1]) & (x[None, :] <= rects[:, 2:3]) &
+         (y[None, :] >= rects[:, 1:2]) & (y[None, :] <= rects[:, 3:4]))
+    return jnp.sum(m.astype(jnp.int32), axis=1)
+
+
+def knn_topk(qxy, count, px, py, *, k):
+    """(neg_d2 (Q,k), idx (Q,k)) via full sort."""
+    d2 = ((px[None, :] - qxy[:, 0:1]) ** 2 +
+          (py[None, :] - qxy[:, 1:2]) ** 2)
+    pos = jnp.arange(px.shape[0], dtype=jnp.int32)
+    d2 = jnp.where(pos[None, :] < count, d2, 3.0e38)
+    order = jnp.argsort(d2, axis=1)[:, :k]
+    best = jnp.take_along_axis(d2, order, axis=1)
+    idx = jnp.where(best < 3.0e38, order.astype(jnp.int32), -1)
+    return -jnp.where(best < 3.0e38, best, 3.0e38), idx
+
+
+def point_in_polygon(poly, n_edges, x, y):
+    """(N,) int32 inside flags (ray casting)."""
+    return CQ.point_in_polygon(x, y, poly,
+                               jnp.asarray(n_edges, jnp.int32)
+                               ).astype(jnp.int32)

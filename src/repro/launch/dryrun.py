@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import (device count locks at first init).
+# (No `from __future__` here for the same reason: these two lines must
+# stay the first statements of the module.)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (no mismatched collectives),
+  * the per-device program fits (memory_analysis),
+  * and yields FLOPs / bytes / collective-bytes for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k \
+      --mesh single --out results/
+  python -m repro.launch.dryrun --all --mesh both --out results/
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import all_arch_ids, get_config
+from repro.data.tokens import input_specs
+from repro.launch import hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.sharding import (MeshRules, batch_specs, cache_specs,
+                            param_specs, use_mesh)
+from repro.train.optimizer import AdamWState, adamw_init
+from repro.train.step import make_train_step
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# long_500k runs only for sub-quadratic archs (see DESIGN.md
+# §Arch-applicability); encoder-only archs would skip decode shapes but
+# none of the assigned archs is encoder-only. (Both id spellings.)
+LONG_OK = {"rwkv6-3b", "hymba-1.5b", "hymba-1-5b", "gemma3-4b"}
+
+
+def arch_cells(arch: str):
+    for shape in SHAPES:
+        if shape == "long_500k" and arch not in LONG_OK:
+            continue
+        yield shape
+
+
+def _micro_for(cfg, batch_local: int, seq: int) -> int:
+    """Microbatch count keeping rematerialized layer-boundary activations
+    under ~2 GB/device: L * (B/micro) * S * d * 2B <= 2e9."""
+    per = cfg.n_layers * batch_local * seq * cfg.d_model * 2
+    n = 1
+    while per / n > 2e9 and n < batch_local:
+        n *= 2
+    return n
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
+    """Env-controlled perf variants (hillclimb; see EXPERIMENTS.md §Perf):
+      REPRO_BF16_W=1   cast weights to bf16 once per step (train/prefill)
+      REPRO_REMAT=x    remat policy name (none|dots)
+    """
+    bf16_w = os.environ.get("REPRO_BF16_W") == "1"
+    remat_policy = os.environ.get("REPRO_REMAT")
+    if remat_policy:
+        from repro.models import transformer as T
+        T.set_remat_policy(remat_policy)
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    spec = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = int(np.prod(list(mesh.shape.values())))
+    rules = MeshRules()
+    t0 = time.time()
+
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = param_specs(mesh, rules, params_sds)
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+
+    if spec["kind"] == "train":
+        batch_sds = input_specs(cfg, spec["batch"], spec["seq"])
+        bspecs = batch_specs(mesh, rules, batch_sds)
+        dp = chips // mesh.shape["model"]
+        n_micro = _micro_for(cfg, spec["batch"] // dp, spec["seq"])
+        step = make_train_step(model, mesh=mesh, rules=rules,
+                               n_micro=n_micro, donate=False,
+                               bf16_weights=bf16_w).raw
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        ospecs = AdamWState(
+            step=NamedSharding(mesh, P()),
+            m=param_specs(mesh, rules, opt_sds.m),
+            v=param_specs(mesh, rules, opt_sds.v))
+        lowered = jax.jit(step, in_shardings=(pspecs, ospecs, bspecs)
+                          ).lower(params_sds, opt_sds, batch_sds)
+        # 6ND + attention flops (2*6*B*S^2*d per layer lower bound skipped)
+        tokens = spec["batch"] * spec["seq"]
+        model_flops = 6.0 * n_active * tokens
+        extra = dict(n_micro=n_micro)
+    elif spec["kind"] == "prefill":
+        batch_sds = input_specs(cfg, spec["batch"], spec["seq"])
+        bspecs = batch_specs(mesh, rules, batch_sds)
+
+        def prefill(p, b):
+            with use_mesh(mesh, rules):
+                if bf16_w:
+                    p = jax.tree_util.tree_map(
+                        lambda w: w.astype(jnp.bfloat16)
+                        if w.dtype == jnp.float32 and w.ndim >= 2 else w,
+                        p)
+                return model.prefill(p, b, max_len=spec["seq"])
+
+        lowered = jax.jit(prefill, in_shardings=(pspecs, bspecs)).lower(
+            params_sds, batch_sds)
+        tokens = spec["batch"] * spec["seq"]
+        model_flops = 2.0 * n_active * tokens
+        extra = {}
+    else:  # decode
+        b, s = spec["batch"], spec["seq"]
+        if cfg.family == "rwkv6":
+            cache_sds = jax.eval_shape(lambda: model.init_state(b))
+        elif cfg.family == "encdec":
+            cache_sds = jax.eval_shape(
+                lambda: model.init_cache(b, max(s // 8, 1024), s))
+        else:
+            cache_sds = jax.eval_shape(lambda: model.init_cache(b, s))
+        cspecs = cache_specs(mesh, rules, cache_sds)
+        from repro.sharding.api import spec_for
+        tok_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        tok_spec = NamedSharding(
+            mesh, spec_for(mesh, rules, (b, 1), ("batch", None)))
+        pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def decode(p, c, t, pos):
+            with use_mesh(mesh, rules):
+                return model.decode_step(p, c, t, pos)
+
+        lowered = jax.jit(decode, in_shardings=(
+            pspecs, cspecs, tok_spec, NamedSharding(mesh, P()))).lower(
+            params_sds, cache_sds, tok_sds, pos_sds)
+        model_flops = 2.0 * n_active * b
+        extra = {}
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    report = hlo.analyze_compiled(compiled, chips,
+                                  model_flops=model_flops)
+    report.update({
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "chips": chips, "params": n_params, "active_params": n_active,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        **extra,
+    })
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = all_arch_ids() if (args.all or not args.arch) else [args.arch]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch in archs:
+        shapes = ([args.shape] if args.shape else list(arch_cells(arch)))
+        for shape in shapes:
+            if shape == "long_500k" and arch not in LONG_OK:
+                print(f"SKIP {arch} {shape} (full-attention arch; see "
+                      f"DESIGN.md)")
+                continue
+            for mk in meshes:
+                tag = f"{arch}__{shape}__{mk}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"done {tag} (cached)")
+                    continue
+                try:
+                    rep = run_cell(arch, shape, mk)
+                    hlo.dump(rep, path)
+                    r = rep["roofline"]
+                    print(f"OK   {tag}: bottleneck={r['bottleneck']} "
+                          f"tc={r['t_compute_s']:.2e} "
+                          f"tm={r['t_memory_s']:.2e} "
+                          f"tl={r['t_collective_s']:.2e} "
+                          f"compile={rep['compile_s']}s", flush=True)
+                except Exception as e:
+                    failures += 1
+                    print(f"FAIL {tag}: {type(e).__name__}: {e}",
+                          flush=True)
+                    with open(path + ".fail", "w") as f:
+                        f.write(traceback.format_exc())
+    print(f"dry-run complete, failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

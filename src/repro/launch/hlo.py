@@ -1,0 +1,190 @@
+"""Compiled-HLO analysis: collective bytes + 3-term roofline.
+
+collective_bytes is NOT in cost_analysis — we parse the post-SPMD
+optimized HLO (compiled.as_text()) and sum result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, weighted by the ring-transfer factor:
+
+    all-reduce        2x  (reduce-scatter + all-gather phases)
+    all-gather        1x  (each chip receives ~result bytes)
+    reduce-scatter    1x
+    all-to-all        1x
+    collective-permute 1x
+
+Shapes in the optimized HLO are PER-DEVICE, so summed bytes are already
+per-chip link traffic.
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|"
+                       r"u32|s16|u16|s8|u8|pred|c64|c128)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\(?[^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, float]:
+    """Per-op-kind byte totals (+ weighted link bytes) from optimized HLO.
+
+    `-done` ops carry the same tuple shape as `-start`; count starts only.
+    """
+    out = {k: 0.0 for k in _COLL_FACTOR}
+    counts = {k: 0 for k in _COLL_FACTOR}
+    weighted = 0.0
+    for m in _OP_RE.finditer(hlo_text):
+        shape_text, kind = m.group(1), m.group(2)
+        if "-done(" in m.group(0):
+            continue
+        b = _shape_bytes(shape_text)
+        out[kind] += b
+        counts[kind] += 1
+        weighted += b * _COLL_FACTOR[kind]
+    return {"bytes_by_kind": out, "counts": counts,
+            "weighted_link_bytes": weighted}
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All inputs are PER-CHIP quantities (post-SPMD HLO shapes are
+    per-device; equivalently HLO_total/(chips*peak) per the assignment
+    formula since SPMD programs are uniform across chips)."""
+
+    flops: float
+    hbm_bytes: float
+    link_bytes: float
+    chips: int
+    model_flops: float = 0.0   # useful 6ND work per chip
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.link_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        if self.flops <= 0:
+            return 0.0
+        return self.model_flops / self.flops
+
+    @property
+    def roofline_frac(self) -> float:
+        """(useful work time at peak) / (bound step time)."""
+        bound = max(self.t_compute, self.t_memory, self.t_collective)
+        if bound <= 0:
+            return 0.0
+        return (self.model_flops / PEAK_FLOPS) / bound
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "link_bytes": self.link_bytes, "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+        }
+
+
+def analyze_compiled(compiled, chips: int, model_flops: float = 0.0):
+    """Extract roofline terms from a jax compiled object.
+
+    Primary numbers come from the trip-count-aware HLO walker
+    (hlo_walk.py) because XLA's HloCostAnalysis counts while-loop bodies
+    once (scan-heavy programs underreport by orders of magnitude —
+    verified in EXPERIMENTS.md §Dry-run). Post-SPMD shapes are
+    per-device, so walker totals are PER-CHIP; `model_flops` (6ND) is the
+    cross-chip total and is divided by `chips` for the useful-work
+    comparison.
+    """
+    from repro.launch import hlo_walk
+    text = compiled.as_text()
+    walk = hlo_walk.total_cost(text)
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    cost = cost or {}
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            if hasattr(ma, attr):
+                mem[attr] = int(getattr(ma, attr))
+    except Exception:
+        pass
+    roof = Roofline(flops=walk["flops"], hbm_bytes=walk["hbm_bytes"],
+                    link_bytes=walk["weighted_link_bytes"], chips=chips,
+                    model_flops=model_flops / max(chips, 1))
+    return {
+        "roofline": roof.to_dict(),
+        "collectives": {"bytes_by_kind": walk["coll_bytes"],
+                        "counts": walk["coll_counts"],
+                        "weighted_link_bytes":
+                            walk["weighted_link_bytes"]},
+        "memory_analysis": mem,
+        "xla_cost_analysis_raw": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "note": "XLA counts while bodies once; see hlo_walk.py",
+        },
+    }
+
+
+def dump(obj, path: str):
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)

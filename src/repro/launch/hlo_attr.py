@@ -1,0 +1,50 @@
+"""Collective attribution: which source ops own the collective bytes.
+
+Used by the §Perf hillclimb loop: folds trip-count multipliers through
+the call graph (like hlo_walk) but keeps per-op attribution via the
+op_name metadata XLA preserves into the optimized HLO.
+"""
+from __future__ import annotations
+
+import re
+
+from repro.launch import hlo_walk
+
+COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute")
+
+
+def attribute(text: str, top: int = 12):
+    costs = hlo_walk.parse_costs(text)
+    comps = hlo_walk.split_computations(text)
+    entry = hlo_walk._entry_name(text)
+    mult = {entry: 1.0}
+    q = [entry]
+    while q:
+        nm = q.pop()
+        cc = costs.get(nm)
+        if not cc:
+            continue
+        for sub, m, _ in cc.subcalls:
+            mult[sub] = mult.get(sub, 0.0) + mult[nm] * m
+            q.append(sub)
+    rows = {}
+    for nm, lines in comps.items():
+        mm = mult.get(nm, 0.0)
+        if mm == 0:
+            continue
+        for ln in lines:
+            m = hlo_walk.OP_RE.match(ln)
+            if not m:
+                continue
+            op = m.group(3).replace("-start", "")
+            if op not in COLL:
+                continue
+            b = hlo_walk._shapes_bytes(m.group(2))
+            meta = re.search(r'op_name="([^"]*)"', ln)
+            key = (op, m.group(2)[:48],
+                   (meta.group(1)[-60:] if meta else "?"))
+            rows[key] = rows.get(key, 0.0) + b * mm
+    out = sorted(rows.items(), key=lambda kv: -kv[1])[:top]
+    return [{"op": k[0], "shape": k[1], "src": k[2], "gb": v / 1e9}
+            for k, v in out]

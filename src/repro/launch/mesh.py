@@ -1,0 +1,36 @@
+"""Production mesh definitions.
+
+Functions (never module-level constants) so importing this module never
+touches jax device state — required by the dry-run's device-count
+override ordering.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, found {len(devices)} — launch with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"(dry-run) or on real hardware")
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_host_mesh(shape=None, axes=None) -> Mesh:
+    """Small mesh over whatever devices exist (tests / CPU runs)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (n, 1)
+        axes = ("data", "model")
+    dev = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+    return Mesh(dev, axes or ("data", "model"))

@@ -1,0 +1,84 @@
+"""Spatial analytics driver — the paper's end-to-end serving scenario.
+
+Builds the distributed learned index over a synthetic city-scale dataset
+and serves batched spatial queries (point / range / kNN / join), printing
+build + per-query-type latencies. This is the LiLIS deployment unit: the
+same engine runs under the production mesh via --mesh host/pod (queries
+replicated, partitions sharded).
+
+``python -m repro.launch.spatial --n 1000000 --partitions 64 --queries 256``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import SpatialEngine, build_index, fit
+from repro.data import spatial as ds
+from repro.launch.mesh import make_host_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="taxi",
+                    choices=list(ds.GENERATORS))
+    ap.add_argument("--n", type=int, default=1_000_000)
+    ap.add_argument("--partitions", type=int, default=64)
+    ap.add_argument("--partitioner", default="kdtree",
+                    choices=["fixed", "adaptive", "quadtree", "kdtree",
+                             "rtree"])
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--selectivity", type=float, default=1e-5)
+    ap.add_argument("--mesh", choices=["none", "host"], default="none")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    print(f"generating {args.n} {args.dataset} points ...")
+    x, y = ds.make(args.dataset, args.n, seed=args.seed)
+
+    t0 = time.perf_counter()
+    part = fit(args.partitioner, x, y, args.partitions, seed=args.seed)
+    t_part = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    index = build_index(x, y, part)
+    jax.block_until_ready(index.key)
+    t_build = time.perf_counter() - t0
+    sizes = index.size_bytes()
+    print(f"partitioner fit {t_part*1e3:.0f} ms; index build "
+          f"{t_build*1e3:.0f} ms; model {sizes['local_model']/1e3:.1f} KB"
+          f" + global {sizes['global_index']/1e3:.1f} KB")
+
+    mesh = make_host_mesh() if args.mesh == "host" else None
+    eng = SpatialEngine(index, mesh=mesh)
+    rng = np.random.default_rng(args.seed)
+    q = args.queries
+
+    ix = rng.integers(0, args.n, q)
+    qx, qy = x[ix], y[ix]
+    rects = ds.random_rects(q, args.selectivity, part.bounds,
+                            seed=args.seed, centers=(x, y))
+    polys, n_edges = ds.random_polygons(max(q // 8, 8), part.bounds,
+                                        seed=args.seed)
+
+    def bench(name, fn):
+        fn()                      # compile
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        print(f"{name:12s} {dt*1e3:9.2f} ms for batch "
+              f"({dt/q*1e6:8.1f} us/query)")
+        return out
+
+    bench("point", lambda: eng.point_query(qx, qy))
+    bench("range", lambda: eng.range_count(rects))
+    bench("knn", lambda: eng.knn(qx[:64], qy[:64], args.k)[0])
+    bench("join", lambda: eng.join_count(polys, n_edges))
+
+
+if __name__ == "__main__":
+    main()

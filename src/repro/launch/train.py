@@ -1,0 +1,61 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+Runs the fault-tolerant loop (auto-resume, async checkpoints, straggler
+watchdog) on whatever devices exist — smoke configs train a ~100k-param
+model on CPU; full configs expect the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.data.tokens import TokenPipeline
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import build_model
+from repro.train import TrainLoopConfig, make_train_step, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", choices=["none", "host", "pod", "multipod"],
+                    default="none")
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--crash-at", type=int, default=None,
+                    help="fault injection (testing)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    mesh = None
+    if args.mesh == "host":
+        mesh = make_host_mesh()
+    elif args.mesh == "pod":
+        mesh = make_production_mesh(multi_pod=False)
+    elif args.mesh == "multipod":
+        mesh = make_production_mesh(multi_pod=True)
+
+    step = make_train_step(model, mesh=mesh, n_micro=args.micro,
+                           peak_lr=args.lr, total_steps=args.steps)
+    pipe = TokenPipeline(cfg, args.batch, args.seq, seed=0)
+    loop_cfg = TrainLoopConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                               ckpt_every=args.ckpt_every,
+                               crash_at_step=args.crash_at)
+    params, opt, hist = train_loop(model, step, pipe, loop_cfg,
+                                   rng=jax.random.PRNGKey(0))
+    print(f"final loss: {hist['loss'][-1]:.4f}  "
+          f"stragglers: {hist['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Model zoo for the assigned architectures.
+
+Families: transformer (GQA / MLA / MoE / sliding-window / enc-dec / VLM
+stub), rwkv6 (attention-free), hymba (parallel attention + SSM heads).
+All models expose the same functional API via ``registry.build_model``:
+
+  init(rng) -> params
+  train_loss(params, batch) -> scalar loss
+  prefill(params, batch) -> (logits, cache)
+  decode_step(params, cache, tokens, pos) -> (logits, cache)
+"""
+from repro.models.registry import build_model  # noqa: F401

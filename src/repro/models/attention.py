@@ -1,0 +1,251 @@
+"""Attention variants: GQA (flash-style chunked, sliding-window) and MLA.
+
+Everything is a pure function over param dicts. Key design points:
+
+* ``flash_attention`` — blockwise online-softmax attention (lax.scan over
+  query and key chunks) so 32k-prefill activations never materialize a
+  (S x S) score matrix. Masks are position-based: causal, sliding-window,
+  and kv-length (for padded decode caches) — all fixed-shape.
+* GQA grouping is done by reshaping q to (B, T, KV, G, D), so kv heads are
+  never materialized repeated.
+* MLA (DeepSeek-V2): trains in the expanded form; decodes in the ABSORBED
+  form with a compressed (kv_lora + rope) cache — the memory saving that
+  makes 32k/500k decode caches feasible on a 16 GB chip.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, apply_rope, rope_tables
+from repro.sharding import gather_weight, shard_attn_acts
+
+NEG_INF = -1.0e30
+
+
+GLOBAL_WINDOW = 1 << 30  # "no window": larger than any supported seq
+
+
+def _mask(q_pos, k_pos, window, kv_len, causal: bool):
+    """(Tq, Tk) validity mask from positions. ``window`` may be traced
+    (per-layer scanned value); GLOBAL_WINDOW disables it arithmetically."""
+    if causal:
+        m = k_pos[None, :] <= q_pos[:, None]
+    else:
+        m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    m &= (q_pos[:, None] - k_pos[None, :]) < window
+    if kv_len is not None:
+        m &= k_pos[None, :] < kv_len
+    return m
+
+
+def flash_attention(q, k, v, *, q_pos, k_pos, window=GLOBAL_WINDOW,
+                    kv_len=None, q_chunk: int = 512, kv_chunk: int = 1024,
+                    scale: Optional[float] = None, causal: bool = True):
+    """Blockwise attention. q: (B,Tq,H,D); k,v: (B,Tk,KV,Dk/Dv).
+
+    Returns (B, Tq, H, Dv). H must be a multiple of KV (GQA groups).
+    """
+    b, tq, h, d = q.shape
+    _, tk, kv, dv = v.shape
+    g = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    qc = min(q_chunk, tq)
+    kc = min(kv_chunk, tk)
+    assert tq % qc == 0 and tk % kc == 0
+    nq, nk = tq // qc, tk // kc
+
+    qg = (q.reshape(b, nq, qc, kv, g, d) * scale).astype(q.dtype)
+    kg = k.reshape(b, nk, kc, kv, d)
+    vg = v.reshape(b, nk, kc, kv, dv)
+    qp = q_pos.reshape(nq, qc)
+    kp = k_pos.reshape(nk, kc)
+
+    def q_step(_, qi):
+        qblk, qpos = qi                       # (B,qc,KV,G,D), (qc,)
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            kblk, vblk, kpos = ki
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qblk, kblk,
+                           preferred_element_type=jnp.float32)
+            mask = _mask(qpos, kpos, window, kv_len, causal)  # (qc, kc)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqc,bckv->bkgqv", p.astype(vblk.dtype),
+                            vblk, preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((b, kv, g, qc), NEG_INF, jnp.float32),
+                jnp.zeros((b, kv, g, qc), jnp.float32),
+                jnp.zeros((b, kv, g, qc, dv), jnp.float32))
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, init,
+            (jnp.moveaxis(kg, 1, 0), jnp.moveaxis(vg, 1, 0), kp))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return None, out.astype(q.dtype)                  # (B,KV,G,qc,Dv)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.moveaxis(qg, 1, 0), qp))
+    # (nq, B, KV, G, qc, Dv) -> (B, Tq, H, Dv)
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 4, 1, 2, 3, 5)
+    return out.reshape(b, tq, h, dv)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def gqa_project(p, x, cfg: ModelConfig):
+    b, t, _ = x.shape
+    q = x @ gather_weight(p["wq"].astype(x.dtype), None, "tp")
+    k = x @ gather_weight(p["wk"].astype(x.dtype), None, "tp")
+    v = x @ gather_weight(p["wv"].astype(x.dtype), None, "tp")
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def gqa_attn(p, x, cfg: ModelConfig, *, positions, window=GLOBAL_WINDOW,
+             cache=None, q_chunk=512, kv_chunk=1024, causal: bool = True):
+    """Full-sequence (train/prefill) GQA. Returns (out, (k, v))."""
+    b, t, _ = x.shape
+    q, k, v = gqa_project(p, x, cfg)
+    cos, sin = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+    q = shard_attn_acts(apply_rope(q, cos, sin), cfg.n_heads)
+    k = shard_attn_acts(apply_rope(k, cos, sin), cfg.n_heads)
+    v = shard_attn_acts(v, cfg.n_heads)
+    out = flash_attention(q, k, v, q_pos=positions, k_pos=positions,
+                          window=window, q_chunk=q_chunk,
+                          kv_chunk=kv_chunk, causal=causal)
+    out = shard_attn_acts(out, cfg.n_heads)
+    out = out.reshape(b, t, -1) @ gather_weight(
+        p["wo"].astype(x.dtype), "tp", None)
+    return out, (k, v)
+
+
+def gqa_decode(p, x, cfg: ModelConfig, *, cache_k, cache_v, pos,
+               window=GLOBAL_WINDOW):
+    """One-token decode against a padded cache. x: (B,1,d)."""
+    b = x.shape[0]
+    s_max = cache_k.shape[1]
+    q, k, v = gqa_project(p, x, cfg)
+    cos, sin = rope_tables(pos[None], cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    kv_pos = jnp.arange(s_max, dtype=jnp.int32)
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, cfg.n_kv_heads, g, cfg.head_dim) * cfg.head_dim**-0.5
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, cache_k,
+                   preferred_element_type=jnp.float32)
+    valid = (kv_pos <= pos) & ((pos - kv_pos) < window)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1).astype(cache_v.dtype)
+    ctx = jnp.einsum("bkgs,bskv->bkgv", pattn, cache_v,
+                     preferred_element_type=jnp.float32)
+    out = ctx.reshape(b, 1, -1).astype(x.dtype) @ p["wo"].astype(x.dtype)
+    return out, (cache_k, cache_v)
+
+
+# ---------------------------------------------------------------------------
+# MLA block (DeepSeek-V2 / MiniCPM3)
+# ---------------------------------------------------------------------------
+
+def _mla_q(p, x, cfg: ModelConfig, positions):
+    from repro.models.common import rms_norm
+    b, t, _ = x.shape
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if cfg.q_lora:
+        cq = rms_norm(x @ p["w_dq"].astype(x.dtype), p["q_norm"],
+                      cfg.norm_eps)
+        q = cq @ p["w_uq"].astype(x.dtype)
+    else:
+        q = x @ p["wq"].astype(x.dtype)
+    q = q.reshape(b, t, cfg.n_heads, qk)
+    q_nope = q[..., :cfg.qk_nope_dim]
+    q_rope = q[..., cfg.qk_nope_dim:]
+    cos, sin = rope_tables(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope, (cos, sin)
+
+
+def mla_compress(p, x, cfg: ModelConfig, positions):
+    """x -> (c_kv normed (B,T,r), k_rope (B,T,1,rope))."""
+    from repro.models.common import rms_norm
+    ckv = x @ p["w_dkv"].astype(x.dtype)
+    c, k_rope = ckv[..., :cfg.kv_lora], ckv[..., cfg.kv_lora:]
+    c = rms_norm(c, p["kv_norm"], cfg.norm_eps)
+    cos, sin = rope_tables(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)
+    return c, k_rope
+
+
+def mla_attn(p, x, cfg: ModelConfig, *, positions, q_chunk=512,
+             kv_chunk=1024):
+    """Expanded-form MLA (train / prefill). Returns (out, (c, k_rope))."""
+    b, t, _ = x.shape
+    q_nope, q_rope, _ = _mla_q(p, x, cfg, positions)
+    c, k_rope = mla_compress(p, x, cfg, positions)
+    k_nope = (c @ gather_weight(p["w_uk"].astype(x.dtype), None, "tp")
+              ).reshape(b, t, cfg.n_heads, cfg.qk_nope_dim)
+    v = (c @ gather_weight(p["w_uv"].astype(x.dtype), None, "tp")
+         ).reshape(b, t, cfg.n_heads, cfg.v_head_dim)
+    # seq-TP fallback measured HARMFUL for MLA (minicpm3: tl 3.7->139 s;
+    # EXPERIMENTS.md §Perf) — MLA keeps propagation-derived sharding
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope[..., :cfg.qk_rope_dim].shape
+                                  [:3] + (cfg.qk_rope_dim,))], axis=-1)
+    out = flash_attention(q, k, v, q_pos=positions, k_pos=positions,
+                          q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out = out.reshape(b, t, -1) @ gather_weight(
+        p["wo"].astype(x.dtype), "tp", None)
+    return out, (c, k_rope[:, :, 0, :])
+
+
+def mla_decode(p, x, cfg: ModelConfig, *, cache_c, cache_rope, pos):
+    """Absorbed-form one-token decode. cache_c: (B,S,r); cache_rope:
+    (B,S,rope). The per-token cache is r + rope floats (vs 2*H*D for GQA).
+    """
+    b = x.shape[0]
+    s_max = cache_c.shape[1]
+    q_nope, q_rope, _ = _mla_q(p, x, cfg, pos[None])
+    c_new, k_rope_new = mla_compress(p, x, cfg, pos[None])
+    cache_c = jax.lax.dynamic_update_slice(
+        cache_c, c_new.astype(cache_c.dtype), (0, pos, 0))
+    cache_rope = jax.lax.dynamic_update_slice(
+        cache_rope, k_rope_new[:, :, 0, :].astype(cache_rope.dtype),
+        (0, pos, 0))
+    # absorb w_uk into q: (B,1,H,nope) x (r,H,nope) -> (B,H,r)
+    w_uk = p["w_uk"].astype(x.dtype).reshape(
+        cfg.kv_lora, cfg.n_heads, cfg.qk_nope_dim)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], w_uk)
+    s = (jnp.einsum("bhr,bsr->bhs", q_abs, cache_c,
+                    preferred_element_type=jnp.float32) +
+         jnp.einsum("bhp,bsp->bhs", q_rope[:, 0], cache_rope,
+                    preferred_element_type=jnp.float32))
+    s = s * (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    kv_pos = jnp.arange(s_max, dtype=jnp.int32)
+    s = jnp.where((kv_pos <= pos)[None, None], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1).astype(cache_c.dtype)
+    ctx = jnp.einsum("bhs,bsr->bhr", pattn, cache_c,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    w_uv = p["w_uv"].astype(x.dtype).reshape(
+        cfg.kv_lora, cfg.n_heads, cfg.v_head_dim)
+    o = jnp.einsum("bhr,rhv->bhv", ctx, w_uv)
+    out = o.reshape(b, 1, -1) @ p["wo"].astype(x.dtype)
+    return out, (cache_c, cache_rope)

@@ -1,0 +1,189 @@
+"""Hymba: hybrid-head layers — attention heads and Mamba2-style SSD heads
+run IN PARALLEL on the same residual input; their outputs fuse by
+averaging (paper's mean-fusion, learnable scaling omitted — noted in
+DESIGN.md). Most layers use sliding-window attention; first/middle/last
+are global (cfg.global_layers).
+
+SSD branch: scalar per-head decay a*dt (Mamba2), state (N x P) per head,
+computed chunkwise via the shared linear_attn scan. The decay-shift trick
+(q premultiplied by exp(a*dt)) converts the "decay applies to current
+state" SSM convention into the linear-attn form; the current-token
+(diagonal) term is added in closed form.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models.common import (ModelConfig, init_params, rms_norm,
+                                 softmax_xent, swiglu)
+from repro.models.linear_attn import chunked_linear_attn
+from repro.models.transformer import (GLOBAL_WINDOW, _checkpoint,
+                                      window_array)
+from repro.sharding import constrain
+
+
+def _ssd_project(p, x, cfg: ModelConfig):
+    b, t, _ = x.shape
+    hm, pp, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xs = (x @ p["wx"].astype(x.dtype)).reshape(b, t, hm, pp)
+    bt = x @ p["wb"].astype(x.dtype)                 # (B,T,N)
+    ct = x @ p["wc"].astype(x.dtype)
+    dt = jax.nn.softplus(
+        (x @ p["wdt"].astype(x.dtype)).astype(jnp.float32))  # (B,T,Hm)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))     # (Hm,)
+    logw = a[None, None] * dt                        # (B,T,Hm) <= 0
+    return xs, bt, ct, dt, logw
+
+
+def ssd_branch(p, x, cfg: ModelConfig, state=None):
+    """Mamba2-SSD over the full sequence. Returns (out, final state)."""
+    b, t, _ = x.shape
+    hm, pp, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xs, bt, ct, dt, logw = _ssd_project(p, x, cfg)
+    v = (xs.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    k = jnp.broadcast_to(bt[:, :, None, :], (b, t, hm, n)).astype(x.dtype)
+    q_raw = jnp.broadcast_to(ct[:, :, None, :], (b, t, hm, n))
+    # decay-shift: current-state convention -> linear-attn convention
+    q = (q_raw.astype(jnp.float32) * jnp.exp(logw)[..., None]).astype(
+        x.dtype)
+    lw = jnp.broadcast_to(logw[..., None], (b, t, hm, n))
+    out, new_state = chunked_linear_attn(q, k, v, lw, state=state)
+    # diagonal (current token): C.B * (dt x)
+    diag = jnp.einsum("btn,btn->bt", ct.astype(jnp.float32),
+                      bt.astype(jnp.float32))
+    out = out + (diag[:, :, None, None] * v.astype(jnp.float32)).astype(
+        out.dtype)
+    out = out + p["dskip"].astype(out.dtype)[None, None] * xs
+    out = rms_norm(out.reshape(b, t, hm * pp), p["norm"], cfg.norm_eps)
+    return out @ p["wo"].astype(x.dtype), new_state
+
+
+def ssd_decode(p, x, cfg: ModelConfig, state):
+    """One-token SSD: h = e^{a dt} h + dt B x ; y = C h + D x."""
+    b = x.shape[0]
+    hm, pp, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xs, bt, ct, dt, logw = _ssd_project(p, x, cfg)
+    w = jnp.exp(logw[:, 0])                               # (B,Hm)
+    kv = jnp.einsum("bn,bhp->bhnp", bt[:, 0].astype(jnp.float32),
+                    (xs[:, 0].astype(jnp.float32) *
+                     dt[:, 0][..., None]))
+    new_state = w[..., None, None] * state + kv
+    y = jnp.einsum("bn,bhnp->bhp", ct[:, 0].astype(jnp.float32),
+                   new_state)
+    y = y + p["dskip"].astype(jnp.float32)[None] * xs[:, 0].astype(
+        jnp.float32)
+    y = rms_norm(y.reshape(b, 1, hm * pp).astype(x.dtype), p["norm"],
+                 cfg.norm_eps)
+    return y @ p["wo"].astype(x.dtype), new_state
+
+
+class HymbaModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, rng):
+        return init_params(self.cfg, rng)
+
+    def init_cache(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        ln = cfg.n_layers
+        return {
+            "k": jnp.zeros((ln, batch_size, max_len, cfg.n_kv_heads,
+                            cfg.head_dim), cfg.cdtype),
+            "v": jnp.zeros((ln, batch_size, max_len, cfg.n_kv_heads,
+                            cfg.head_dim), cfg.cdtype),
+            "ssm": jnp.zeros((ln, batch_size, cfg.ssm_heads,
+                              cfg.ssm_state, cfg.ssm_head_dim),
+                             jnp.float32),
+        }
+
+    def _layer_full(self, lp, x, positions, w, qc, kc, ssm_state):
+        cfg = self.cfg
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        attn_out, kv = A.gqa_attn(lp["attn"], h, cfg, positions=positions,
+                                  window=w, q_chunk=qc, kv_chunk=kc)
+        ssm_out, new_ssm = ssd_branch(lp["ssm"], h, cfg, state=ssm_state)
+        x = x + 0.5 * constrain(attn_out + ssm_out, "batch", None, None)
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        f = lp["ffn"]
+        x = x + swiglu(h, f["w1"].astype(h.dtype), f["w3"].astype(h.dtype),
+                       f["w2"].astype(h.dtype))
+        return x, kv, new_ssm
+
+    def forward(self, params, batch, *, remat=False, collect_cache=False):
+        cfg = self.cfg
+        tok = batch["tokens"]
+        x = params["embed"].astype(cfg.cdtype)[tok]
+        x = constrain(x, "batch", None, None)
+        b, s = tok.shape
+        positions = jnp.arange(s, dtype=jnp.int32)
+        qc, kc = min(512, s), min(1024, s)
+        wins = window_array(cfg, cfg.n_layers)
+        ssm0 = jnp.zeros((cfg.n_layers, b, cfg.ssm_heads, cfg.ssm_state,
+                          cfg.ssm_head_dim), jnp.float32)
+
+        def body(xc, xs):
+            lp, w, st = xs
+            xc, kv, new_ssm = self._layer_full(lp, xc, positions, w, qc,
+                                               kc, st)
+            return xc, (kv, new_ssm) if collect_cache else None
+
+        body_fn = _checkpoint(body) if remat else body
+        x, ys = jax.lax.scan(body_fn, x, (params["layers"], wins, ssm0))
+        if collect_cache:
+            x = x[:, -1:]
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = constrain(x @ params["lm_head"].astype(cfg.cdtype),
+                           "batch", None, "tp")
+        return logits, ys
+
+    def train_loss(self, params, batch):
+        logits, _ = self.forward(params, batch, remat=True)
+        return softmax_xent(logits, batch["labels"], batch["mask"])
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        s = batch["tokens"].shape[1]
+        max_len = max_len or s
+        logits, ys = self.forward(params, batch, collect_cache=True)
+        (k, v), ssm = ys
+
+        def pad_s(a):
+            if a.shape[2] >= max_len:
+                return a
+            pad = [(0, 0)] * a.ndim
+            pad[2] = (0, max_len - a.shape[2])
+            return jnp.pad(a, pad)
+
+        return logits, {"k": pad_s(k), "v": pad_s(v), "ssm": ssm}
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = params["embed"].astype(cfg.cdtype)[tokens]
+        wins = window_array(cfg, cfg.n_layers)
+
+        def body(xc, xs):
+            lp, ck, cv, st, w = xs
+            h = rms_norm(xc, lp["ln1"], cfg.norm_eps)
+            attn_out, new_kv = A.gqa_decode(lp["attn"], h, cfg, cache_k=ck,
+                                            cache_v=cv, pos=pos, window=w)
+            ssm_out, new_st = ssd_decode(lp["ssm"], h, cfg, st)
+            xc = xc + 0.5 * (attn_out + ssm_out)
+            h = rms_norm(xc, lp["ln2"], cfg.norm_eps)
+            f = lp["ffn"]
+            xc = xc + swiglu(h, f["w1"].astype(h.dtype),
+                             f["w3"].astype(h.dtype),
+                             f["w2"].astype(h.dtype))
+            return xc, (new_kv[0], new_kv[1], new_st)
+
+        x, news = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"],
+                      cache["ssm"], wins))
+        cache = {"k": news[0], "v": news[1], "ssm": news[2]}
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = constrain(x @ params["lm_head"].astype(cfg.cdtype),
+                           "batch", None, "tp")
+        return logits, cache

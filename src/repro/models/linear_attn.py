@@ -1,0 +1,95 @@
+"""Chunked linear-attention / SSM scan — shared by RWKV6 and Hymba(SSD).
+
+Recurrence (per batch b, head h):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T        S: (Dk, Dv)
+    o_t = q_t^T S_t  (+ bonus term for RWKV)
+
+computed chunkwise (chunk L): within a chunk the contributions factor into
+an intra-chunk masked (q k^T) v matmul plus a cross-chunk q S_0 term, with
+cumulative per-channel decay products. This is the TPU-native adaptation
+of the CUDA-recurrent kernels (fla/mamba-ssd): sequential depth drops from
+T to T/L, and all inner math is MXU matmuls. f32 accumulation throughout
+(decay ratios are bounded by clamping log-decay per chunk).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_linear_attn(q, k, v, logw, *, chunk: int = 64, state=None,
+                        bonus=None):
+    """q, k: (B,T,H,Dk); v: (B,T,H,Dv); logw: (B,T,H,Dk) log-decay <= 0.
+
+    bonus: optional (H, Dk) RWKV "u" — adds u-weighted CURRENT token
+    contribution (o_t += (q_t . (u * k_t)) v_t).
+    state: optional initial (B,H,Dk,Dv).
+    Returns (out (B,T,H,Dv) f32-accumulated cast to q.dtype,
+             final state (B,H,Dk,Dv) f32).
+    """
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    lc = min(chunk, t)
+    assert t % lc == 0
+    n = t // lc
+
+    qf = q.astype(jnp.float32).reshape(b, n, lc, h, dk)
+    kf = k.astype(jnp.float32).reshape(b, n, lc, h, dk)
+    vf = v.astype(jnp.float32).reshape(b, n, lc, h, dv)
+    # clamp so within-chunk inverse decays stay finite
+    lw = jnp.clip(logw.astype(jnp.float32), -60.0, 0.0
+                  ).reshape(b, n, lc, h, dk)
+
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    idx = jnp.arange(lc)
+    causal_strict = (idx[:, None] > idx[None, :]).astype(jnp.float32)
+
+    def step(s, inp):
+        qc, kc, vc, lwc = inp                  # (B, lc, H, *)
+        # cw_t = prod_{j<t} w_j   (exclusive cumulative log-decay)
+        cum = jnp.cumsum(lwc, axis=1)          # inclusive
+        cw_excl = cum - lwc                    # exclusive
+        cw_end = cum[:, -1:]                   # (B,1,H,Dk) total decay
+        q_t = qc * jnp.exp(cw_excl)            # q~
+        k_t = kc * jnp.exp(-cum)               # k~ (divide by cw_{i+1})
+        k_end = kc * jnp.exp(cw_end - cum)     # k * (cwL / cw_{i+1})
+        # intra-chunk: strict-causal (q~ k~^T) V
+        att = jnp.einsum("blhd,bmhd->bhlm", q_t, k_t)
+        att = att * causal_strict[None, None]
+        intra = jnp.einsum("bhlm,bmhv->blhv", att, vc)
+        # current-token bonus (RWKV u-term) — the diagonal
+        if bonus is not None:
+            diag = jnp.einsum("blhd,blhd->blh", qc, bonus[None, None] * kc)
+            intra = intra + diag[..., None] * vc
+        # cross-chunk: q~ S0
+        cross = jnp.einsum("blhd,bhdv->blhv", q_t, s)
+        # state update: S = diag(cwL) S0 + k_end^T V
+        s_new = (jnp.exp(cw_end[:, 0])[..., None] * s +
+                 jnp.einsum("bmhd,bmhv->bhdv", k_end, vc))
+        return s_new, intra + cross
+
+    state, outs = jax.lax.scan(
+        step, state,
+        (jnp.moveaxis(qf, 1, 0), jnp.moveaxis(kf, 1, 0),
+         jnp.moveaxis(vf, 1, 0), jnp.moveaxis(lw, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, t, h, dv)
+    return out.astype(q.dtype), state
+
+
+def linear_attn_decode(q, k, v, logw, state, bonus=None):
+    """Single-token recurrence. q,k: (B,H,Dk); v: (B,H,Dv);
+    state (B,H,Dk,Dv) f32. Returns (out (B,H,Dv), new state)."""
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    w = jnp.exp(jnp.clip(logw.astype(jnp.float32), -60.0, 0.0))
+    kv = jnp.einsum("bhd,bhv->bhdv", kf, vf)
+    if bonus is not None:
+        eff = state + bonus[None, :, :, None] * kv
+    else:
+        eff = state + kv
+    out = jnp.einsum("bhd,bhdv->bhv", qf, eff)
+    new_state = w[..., None] * state + kv
+    return out.astype(q.dtype), new_state

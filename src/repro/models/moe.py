@@ -1,0 +1,96 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Dispatch strategy (TPU-native, no torch-style all_to_all emulation):
+tokens are flattened, their (expert, rank) pairs sorted, and each expert
+receives its first `capacity` tokens via a static-shape scatter. Expert
+matmuls run as a single (E, C, d) x (E, d, f) batched einsum whose expert
+axis shards over the `model` mesh axis (expert parallelism); XLA SPMD
+inserts the all-to-all at the scatter/gather boundary. Dropped tokens
+(over capacity) fall back to the shared-expert/zero path — standard
+capacity-factor semantics.
+
+Router: softmax top-k with probability renormalization (DeepSeek-V2
+style) + load-balancing auxiliary loss (returned for the train loop).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, swiglu
+from repro.sharding import gather_weight
+
+
+def moe_ffn(p, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, d) -> (out (B, T, d), aux_loss scalar)."""
+    b, t, d = x.shape
+    n_tok = b * t
+    e = cfg.n_experts
+    k = cfg.top_k
+    cap = int(max(cfg.capacity_factor * n_tok * k / e, 1))
+    # round capacity to a lane-friendly multiple
+    cap = -(-cap // 8) * 8
+
+    xf = x.reshape(n_tok, d)
+    gates = jax.nn.softmax(
+        (xf @ p["router"].astype(x.dtype)).astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(gates, k)               # (N, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True),
+                                1e-9)
+
+    # -- load balance aux (Switch-style) --
+    me = jnp.mean(gates, axis=0)                          # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0 / (n_tok * k))
+    aux = e * jnp.sum(me * ce)
+
+    # -- sort-based, GATHER-only dispatch --
+    # Scatters into big sharded buffers lower to full-buffer all-reduces
+    # under SPMD (measured: ~5 TB/chip/step on dbrx — EXPERIMENTS.md
+    # §Perf iteration 2). Instead, scatter only TINY int32 index maps
+    # ((E*cap,) slot->token) and move activations with gathers, which
+    # SPMD lowers to all-gather/all-to-all-class collectives.
+    flat_e = top_e.reshape(-1)                            # (N*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # rank of each dispatch within its expert group
+    grp_start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    rank = jnp.arange(n_tok * k) - grp_start[sorted_e]
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_e * cap + rank, e * cap)  # drop slot
+    tok_of = order // k                                    # source token
+
+    # slot -> source token (int map, + sentinel row for empty slots)
+    slot_src = jnp.full((e * cap + 1,), n_tok, jnp.int32).at[slot].set(
+        tok_of.astype(jnp.int32), mode="drop")
+    xf_z = jnp.concatenate([xf, jnp.zeros((1, d), x.dtype)], axis=0)
+    xe = xf_z[slot_src[:-1]].reshape(e, cap, d)            # gather
+
+    # -- expert compute: batched over the (model-sharded) expert axis;
+    # expert weights re-shard to EP-only at use time (ZeRO-3 gather) so
+    # the contraction dims are unsharded -> no activation all-reduce --
+    we1 = gather_weight(p["we1"].astype(x.dtype), "expert", None, None)
+    we3 = gather_weight(p["we3"].astype(x.dtype), "expert", None, None)
+    we2 = gather_weight(p["we2"].astype(x.dtype), "expert", None, None)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, we1))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, we3)
+    ye = jnp.einsum("ecf,efd->ecd", h, we2)
+
+    # -- GATHER-only combine: invert the sort, sum each token's k picks --
+    ye_flat = jnp.concatenate(
+        [ye.reshape(e * cap, d), jnp.zeros((1, d), x.dtype)], axis=0)
+    val = ye_flat[jnp.where(keep, slot, e * cap)]          # (N*k, d)
+    inv = jnp.argsort(order)                               # dispatch of
+    val_t = val[inv].reshape(n_tok, k, d)                  # each token
+    keep_t = keep[inv].reshape(n_tok, k).astype(x.dtype)
+    out = jnp.sum(val_t * (top_p.astype(x.dtype) * keep_t)[..., None],
+                  axis=1)
+
+    if cfg.n_shared:
+        out = out + swiglu(
+            xf, gather_weight(p["ws1"].astype(x.dtype), None, "tp"),
+            gather_weight(p["ws3"].astype(x.dtype), None, "tp"),
+            gather_weight(p["ws2"].astype(x.dtype), "tp", None))
+    return out.reshape(b, t, d), aux

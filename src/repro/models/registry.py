@@ -1,0 +1,18 @@
+"""Model registry: ModelConfig.family -> model class."""
+from __future__ import annotations
+
+from repro.models.common import ModelConfig
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "rwkv6":
+        from repro.models.rwkv6 import RWKV6Model
+        return RWKV6Model(cfg)
+    if cfg.family == "hymba":
+        from repro.models.hymba import HymbaModel
+        return HymbaModel(cfg)
+    if cfg.family == "encdec":
+        from repro.models.transformer import EncDecModel
+        return EncDecModel(cfg)
+    from repro.models.transformer import TransformerModel
+    return TransformerModel(cfg)

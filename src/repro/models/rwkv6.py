@@ -1,0 +1,136 @@
+"""RWKV6 "Finch": attention-free LM with data-dependent decay.
+
+Time-mix: per-channel data-dependent decay w_t = exp(-exp(d_t)) where
+d_t comes from a low-rank MLP of the token-shift-interpolated input
+(the Finch contribution), plus the per-head bonus "u" for the current
+token. The sequential wkv recurrence runs CHUNKED (linear_attn.py):
+T/64 sequential steps of MXU matmuls instead of T scalar steps — the
+TPU-native adaptation of the CUDA wkv kernel.
+
+Decode state per layer: wkv state (B,H,D,D) f32 + last-token shift
+buffers — O(1) in sequence length, which is why this arch serves the
+long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ModelConfig, init_params, rms_norm,
+                                 softmax_xent)
+from repro.models.linear_attn import chunked_linear_attn, linear_attn_decode
+from repro.sharding import constrain
+
+
+def _token_shift(x, last):
+    """x: (B,T,d); last: (B,1,d) from the previous segment."""
+    prev = jnp.concatenate([last, x[:, :-1]], axis=1)
+    return prev
+
+
+def _time_mix(p, x, last, cfg: ModelConfig, state):
+    b, t, d = x.shape
+    h = cfg.ssm_heads
+    hd = d // h
+    prev = _token_shift(x, last)
+    mix = p["mix_x"].astype(x.dtype)              # (5, d)
+    xr = x + (prev - x) * mix[0]
+    xk = x + (prev - x) * mix[1]
+    xv = x + (prev - x) * mix[2]
+    xg = x + (prev - x) * mix[3]
+    xw = x + (prev - x) * mix[4]
+
+    r = (xr @ p["wr"].astype(x.dtype)).reshape(b, t, h, hd)
+    k = (xk @ p["wk"].astype(x.dtype)).reshape(b, t, h, hd)
+    v = (xv @ p["wv"].astype(x.dtype)).reshape(b, t, h, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    # data-dependent decay (low-rank): logw in (-inf, 0)
+    dd = jnp.tanh(xw @ p["wd1"].astype(x.dtype)) @ p["wd2"].astype(x.dtype)
+    logw = -jnp.exp(jnp.clip(
+        p["decay_base"].astype(jnp.float32).reshape(1, 1, h, hd) +
+        dd.astype(jnp.float32).reshape(b, t, h, hd), -8.0, 4.0))
+    bonus = p["bonus"].astype(jnp.float32)
+
+    out, new_state = chunked_linear_attn(r, k, v, logw, state=state,
+                                         bonus=bonus)
+    out = out.reshape(b, t, d)
+    out = rms_norm(out, p["ln_x"], cfg.norm_eps) * g
+    return out @ p["wo"].astype(x.dtype), new_state, x[:, -1:]
+
+
+def _channel_mix(p, x, last, cfg: ModelConfig):
+    prev = _token_shift(x, last)
+    mix = p["mix_c"].astype(x.dtype)
+    xk = x + (prev - x) * mix[0]
+    xr = x + (prev - x) * mix[1]
+    k = jnp.square(jax.nn.relu(xk @ p["ck"].astype(x.dtype)))
+    return jax.nn.sigmoid(xr) * (k @ p["cv"].astype(x.dtype)), x[:, -1:]
+
+
+class RWKV6Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, rng):
+        return init_params(self.cfg, rng)
+
+    def init_state(self, batch_size: int):
+        cfg = self.cfg
+        d = cfg.d_model
+        h = cfg.ssm_heads
+        hd = d // h
+        ln = cfg.n_layers
+        return {
+            "wkv": jnp.zeros((ln, batch_size, h, hd, hd), jnp.float32),
+            "shift_t": jnp.zeros((ln, batch_size, 1, d), cfg.cdtype),
+            "shift_c": jnp.zeros((ln, batch_size, 1, d), cfg.cdtype),
+        }
+
+    def _forward(self, params, tokens, state, *, remat: bool = False,
+                 last_only: bool = False):
+        cfg = self.cfg
+        x = params["embed"].astype(cfg.cdtype)[tokens]
+        x = constrain(x, "batch", None, None)
+
+        def body(carry, xs):
+            xc = carry
+            lp, wkv, sh_t, sh_c = xs
+            h = rms_norm(xc, lp["ln1"], cfg.norm_eps)
+            out, wkv2, sh_t2 = _time_mix(lp, h, sh_t, cfg, wkv)
+            xc = xc + constrain(out, "batch", None, None)
+            h = rms_norm(xc, lp["ln2"], cfg.norm_eps)
+            out, sh_c2 = _channel_mix(lp, h, sh_c, cfg)
+            xc = xc + constrain(out, "batch", None, None)
+            return xc, (wkv2, sh_t2, sh_c2)
+
+        body_fn = jax.checkpoint(body) if remat else body
+        x, news = jax.lax.scan(
+            body_fn, x, (params["layers"], state["wkv"],
+                         state["shift_t"], state["shift_c"]))
+        if last_only:
+            x = x[:, -1:]
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["lm_head"].astype(cfg.cdtype)
+        logits = constrain(x @ head, "batch", None, "tp")
+        new_state = {"wkv": news[0], "shift_t": news[1], "shift_c": news[2]}
+        return logits, new_state
+
+    def train_loss(self, params, batch):
+        state = self.init_state(batch["tokens"].shape[0])
+        logits, _ = self._forward(params, batch["tokens"], state,
+                                  remat=True)
+        return softmax_xent(logits, batch["labels"], batch["mask"])
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        state = self.init_state(batch["tokens"].shape[0])
+        logits, state = self._forward(params, batch["tokens"], state,
+                                      last_only=True)
+        return logits, state
+
+    def decode_step(self, params, cache, tokens, pos):
+        """State-based decode: cost independent of context length."""
+        del pos
+        logits, cache = self._forward(params, tokens, cache)
+        return logits, cache

@@ -1,0 +1,445 @@
+"""Decoder-only transformer (GQA/MLA, MoE, sliding-window) + enc-dec.
+
+Layers are stacked and executed with ``lax.scan`` (bounded compile time at
+512-device SPMD lowering — essential on the production mesh) with
+``jax.checkpoint`` rematerialization in training. Per-layer sliding-window
+sizes ride the scan as a traced (L,) array (global layers get a 2^30
+window), so gemma3's 5:1 local:global pattern lives in ONE scan.
+
+DeepSeek-style "first layer dense FFN" layers are unrolled before the
+scan (their shapes differ from the MoE stack).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+from repro.models.common import (ModelConfig, init_params, rms_norm,
+                                 softmax_xent, swiglu)
+from repro.models.moe import moe_ffn
+from repro.sharding import constrain, gather_weight
+
+GLOBAL_WINDOW = 1 << 30
+
+# remat policy toggle (perf hillclimb): which intermediates the
+# checkpointed layer scan may keep instead of recomputing
+_REMAT = {"policy": None}
+
+
+def set_remat_policy(name: str):
+    table = {
+        "none": None,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }
+    _REMAT["policy"] = table[name]
+
+
+def _checkpoint(fn):
+    pol = _REMAT["policy"]
+    if pol is None:
+        return jax.checkpoint(fn)
+    return jax.checkpoint(fn, policy=pol)
+
+
+def window_array(cfg: ModelConfig, n_layers: int, offset: int = 0):
+    return jnp.asarray(
+        [cfg.window_for_layer(i + offset) or GLOBAL_WINDOW
+         for i in range(n_layers)], jnp.int32)
+
+
+class TransformerModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- params -----------------------------------------------------------
+
+    def init(self, rng):
+        return init_params(self.cfg, rng)
+
+    # -- embedding / head ---------------------------------------------------
+
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        tok = batch["tokens"]
+        x = params["embed"].astype(cfg.cdtype)[tok]
+        if cfg.patch_input and "patches" in batch:
+            pe = batch["patches"].astype(cfg.cdtype) @ \
+                params["patch_proj"].astype(cfg.cdtype)
+            x = jnp.concatenate([pe, x], axis=1)
+        x = constrain(x, "batch", None, None)
+        return x
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"]).astype(cfg.cdtype)
+        head = gather_weight(head, None, "tp") if not cfg.tie_embeddings \
+            else head
+        logits = x @ head
+        return constrain(logits, "batch", None, "tp")
+
+    # -- one layer (shared by modes) ----------------------------------------
+
+    def _attn_full(self, p, x, positions, window, qc, kc):
+        cfg = self.cfg
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if cfg.attn == "mla":
+            out, kv = A.mla_attn(p["attn"], h, cfg, positions=positions,
+                                 q_chunk=qc, kv_chunk=kc)
+        else:
+            out, kv = A.gqa_attn(p["attn"], h, cfg, positions=positions,
+                                 window=window, q_chunk=qc, kv_chunk=kc)
+        return x + constrain(out, "batch", None, None), kv
+
+    def _ffn(self, p, x):
+        cfg = self.cfg
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if "moe" in p:
+            out, aux = moe_ffn(p["moe"], h, cfg)
+        else:
+            f = p["ffn"]
+            out = swiglu(h,
+                         gather_weight(f["w1"].astype(h.dtype), None,
+                                       "tp"),
+                         gather_weight(f["w3"].astype(h.dtype), None,
+                                       "tp"),
+                         gather_weight(f["w2"].astype(h.dtype), "tp",
+                                       None))
+            aux = jnp.float32(0.0)
+        return x + constrain(out, "batch", None, None), aux
+
+    def _layer_full(self, p, x, positions, window, qc, kc):
+        x, kv = self._attn_full(p, x, positions, window, qc, kc)
+        x, aux = self._ffn(p, x)
+        return x, kv, aux
+
+    # -- full-sequence forward (train / prefill) -----------------------------
+
+    def forward(self, params, batch, *, remat: bool = False,
+                collect_cache: bool = False):
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        s = x.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        qc = min(512, s)
+        kc = min(1024, s)
+        aux_total = jnp.float32(0.0)
+        fd_kv = []
+        for i in range(cfg.first_dense):
+            x, kv, aux = self._layer_full(params[f"layer{i}"], x,
+                                          positions,
+                                          cfg.window_for_layer(i)
+                                          or GLOBAL_WINDOW, qc, kc)
+            aux_total += aux
+            fd_kv.append(kv)
+
+        n_scan = cfg.n_layers - cfg.first_dense
+        wins = window_array(cfg, n_scan, offset=cfg.first_dense)
+
+        def body(carry, xs):
+            xc, auxc = carry
+            lp, w = xs
+            xc, kv, aux = self._layer_full(lp, xc, positions, w, qc, kc)
+            out = kv if collect_cache else None
+            return (xc, auxc + aux), out
+
+        body_fn = _checkpoint(body) if remat else body
+        (x, aux_total), kvs = jax.lax.scan(
+            body_fn, (x, aux_total), (params["layers"], wins))
+        if collect_cache:
+            x = x[:, -1:]          # prefill only needs last-token logits
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x)
+        if not collect_cache:
+            return logits, aux_total
+        return logits, aux_total, fd_kv, kvs
+
+    # -- training -----------------------------------------------------------
+
+    def train_loss(self, params, batch):
+        logits, aux = self.forward(params, batch, remat=True)
+        loss = softmax_xent(logits, batch["labels"], batch["mask"])
+        return loss + 0.01 * aux
+
+    # -- serving ------------------------------------------------------------
+
+    def _stack_cache(self, fd_kv, kvs, max_len):
+        cfg = self.cfg
+
+        def pad_s(a):
+            s = a.shape[2]
+            if s >= max_len:
+                return a
+            pad = [(0, 0)] * a.ndim
+            pad[2] = (0, max_len - s)
+            return jnp.pad(a, pad)
+
+        if cfg.attn == "mla":
+            cs = kvs[0] if not fd_kv else jnp.concatenate(
+                [jnp.stack([kv[0] for kv in fd_kv]), kvs[0]], axis=0)
+            rs = kvs[1] if not fd_kv else jnp.concatenate(
+                [jnp.stack([kv[1] for kv in fd_kv]), kvs[1]], axis=0)
+            return {"c": pad_s(cs), "rope": pad_s(rs)}
+        ks, vs = kvs
+        if fd_kv:
+            ks = jnp.concatenate([jnp.stack([kv[0] for kv in fd_kv]), ks],
+                                 axis=0)
+            vs = jnp.concatenate([jnp.stack([kv[1] for kv in fd_kv]), vs],
+                                 axis=0)
+        return {"k": pad_s(ks), "v": pad_s(vs)}
+
+    def init_cache(self, batch_size: int, max_len: int):
+        """Empty decode cache (for decode-only lowering)."""
+        cfg = self.cfg
+        ln = cfg.n_layers
+        if cfg.attn == "mla":
+            return {
+                "c": jnp.zeros((ln, batch_size, max_len, cfg.kv_lora),
+                               cfg.cdtype),
+                "rope": jnp.zeros((ln, batch_size, max_len,
+                                   cfg.qk_rope_dim), cfg.cdtype),
+            }
+        return {
+            "k": jnp.zeros((ln, batch_size, max_len, cfg.n_kv_heads,
+                            cfg.head_dim), cfg.cdtype),
+            "v": jnp.zeros((ln, batch_size, max_len, cfg.n_kv_heads,
+                            cfg.head_dim), cfg.cdtype),
+        }
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        s = batch["tokens"].shape[1] + (
+            self.cfg.n_patches if (self.cfg.patch_input and
+                                   "patches" in batch) else 0)
+        max_len = max_len or s
+        logits, _, fd_kv, kvs = self.forward(params, batch,
+                                             collect_cache=True)
+        cache = self._stack_cache(fd_kv, kvs, max_len)
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens (B,1), pos () int32 -> (logits (B,1,V), cache)."""
+        cfg = self.cfg
+        x = params["embed"].astype(cfg.cdtype)[tokens]
+        fd = cfg.first_dense
+        n_scan = cfg.n_layers - fd
+        wins = window_array(cfg, n_scan, offset=fd)
+
+        def attn_dec(p, xc, cache_i, w):
+            h = rms_norm(xc, p["ln1"], cfg.norm_eps)
+            if cfg.attn == "mla":
+                out, new = A.mla_decode(p["attn"], h, cfg,
+                                        cache_c=cache_i[0],
+                                        cache_rope=cache_i[1], pos=pos)
+            else:
+                out, new = A.gqa_decode(p["attn"], h, cfg,
+                                        cache_k=cache_i[0],
+                                        cache_v=cache_i[1], pos=pos,
+                                        window=w)
+            xc = xc + out
+            xc, _ = self._ffn(p, xc)
+            return xc, new
+
+        names = ("c", "rope") if cfg.attn == "mla" else ("k", "v")
+        for i in range(fd):
+            ci = (cache[names[0]][i], cache[names[1]][i])
+            x, new = attn_dec(params[f"layer{i}"], x, ci,
+                              cfg.window_for_layer(i) or GLOBAL_WINDOW)
+            cache = {
+                names[0]: cache[names[0]].at[i].set(new[0]),
+                names[1]: cache[names[1]].at[i].set(new[1]),
+            }
+
+        def body(xc, xs):
+            lp, c0, c1, w = xs
+            xc, new = attn_dec(lp, xc, (c0, c1), w)
+            return xc, new
+
+        x, news = jax.lax.scan(
+            body, x, (params["layers"], cache[names[0]][fd:],
+                      cache[names[1]][fd:], wins))
+        cache = {
+            names[0]: jax.lax.dynamic_update_slice_in_dim(
+                cache[names[0]], news[0], fd, axis=0),
+            names[1]: jax.lax.dynamic_update_slice_in_dim(
+                cache[names[1]], news[1], fd, axis=0),
+        }
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return self._logits(params, x), cache
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (seamless-m4t backbone; audio frontend is a stub)
+# ---------------------------------------------------------------------------
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, rng):
+        return init_params(self.cfg, rng)
+
+    def encode(self, params, frames):
+        """frames: (B, Ss, frame_dim) precomputed embeddings (stub)."""
+        cfg = self.cfg
+        x = frames.astype(cfg.cdtype) @ params["frame_proj"].astype(
+            cfg.cdtype)
+        x = constrain(x, "batch", None, None)
+        s = x.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        qc, kc = min(512, s), min(1024, s)
+
+        def body(xc, lp):
+            h = rms_norm(xc, lp["ln1"], cfg.norm_eps)
+            out, _ = A.gqa_attn(lp["attn"], h, cfg, positions=positions,
+                                q_chunk=qc, kv_chunk=kc, causal=False)
+            xc = xc + out
+            h = rms_norm(xc, lp["ln2"], cfg.norm_eps)
+            f = lp["ffn"]
+            xc = xc + swiglu(h, f["w1"].astype(h.dtype),
+                             f["w3"].astype(h.dtype),
+                             f["w2"].astype(h.dtype))
+            return xc, None
+
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    def _dec_layer(self, lp, x, mem, positions, mem_len, qc, kc):
+        cfg = self.cfg
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        out, kv = A.gqa_attn(lp["attn"], h, cfg, positions=positions,
+                             q_chunk=qc, kv_chunk=kc)
+        x = x + out
+        # cross attention (no rope on memory)
+        h = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        q, _, _ = A.gqa_project(lp["xattn"], h, cfg)
+        mk = (mem @ lp["xattn"]["wk"].astype(mem.dtype)).reshape(
+            mem.shape[0], mem.shape[1], cfg.n_kv_heads, cfg.head_dim)
+        mv = (mem @ lp["xattn"]["wv"].astype(mem.dtype)).reshape(
+            mem.shape[0], mem.shape[1], cfg.n_kv_heads, cfg.head_dim)
+        mpos = jnp.arange(mem.shape[1], dtype=jnp.int32)
+        out = A.flash_attention(
+            q, mk, mv, q_pos=jnp.full((q.shape[1],), mem.shape[1],
+                                      jnp.int32),
+            k_pos=mpos, kv_len=mem_len, q_chunk=min(512, q.shape[1]),
+            kv_chunk=min(1024, mem.shape[1]))
+        x = x + out.reshape(x.shape) @ lp["xattn"]["wo"].astype(x.dtype)
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        f = lp["ffn"]
+        x = x + swiglu(h, f["w1"].astype(h.dtype), f["w3"].astype(h.dtype),
+                       f["w2"].astype(h.dtype))
+        return x, kv
+
+    def forward(self, params, batch, collect_cache: bool = False):
+        cfg = self.cfg
+        mem = self.encode(params, batch["frames"])
+        mem_len = batch.get("frame_len")
+        tok = batch["tokens"]
+        x = params["embed"].astype(cfg.cdtype)[tok]
+        s = x.shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        qc, kc = min(512, s), min(1024, s)
+
+        def body(xc, lp):
+            xc, kv = self._dec_layer(lp, xc, mem, positions, mem_len,
+                                     qc, kc)
+            return xc, kv if collect_cache else None
+
+        x, kvs = jax.lax.scan(body, x, params["dec_layers"])
+        if collect_cache:
+            x = x[:, -1:]
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["lm_head"].astype(cfg.cdtype)
+        logits = constrain(x @ head, "batch", None, "tp")
+        return logits, mem, kvs
+
+    def train_loss(self, params, batch):
+        logits, _, _ = self.forward(params, batch)
+        return softmax_xent(logits, batch["labels"], batch["mask"])
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        cfg = self.cfg
+        logits, mem, kvs = self.forward(params, batch, collect_cache=True)
+        s = batch["tokens"].shape[1]
+        max_len = max_len or s
+        del s
+
+        def pad_s(a):
+            if a.shape[2] >= max_len:
+                return a
+            pad = [(0, 0)] * a.ndim
+            pad[2] = (0, max_len - a.shape[2])
+            return jnp.pad(a, pad)
+
+        # precompute cross-attn K/V once (per layer, over memory)
+        def xkv(lp):
+            mk = (mem @ lp["xattn"]["wk"].astype(mem.dtype)).reshape(
+                mem.shape[0], mem.shape[1], cfg.n_kv_heads, cfg.head_dim)
+            mv = (mem @ lp["xattn"]["wv"].astype(mem.dtype)).reshape(
+                mem.shape[0], mem.shape[1], cfg.n_kv_heads, cfg.head_dim)
+            return mk, mv
+
+        xk, xv = jax.vmap(xkv)(params["dec_layers"])
+        cache = {"k": pad_s(kvs[0]), "v": pad_s(kvs[1]),
+                 "xk": xk, "xv": xv}
+        return logits, cache
+
+    def init_cache(self, batch_size: int, max_len: int, src_len: int):
+        cfg = self.cfg
+        ln = cfg.dec_layers
+        kvh = cfg.n_kv_heads
+        return {
+            "k": jnp.zeros((ln, batch_size, max_len, kvh, cfg.head_dim),
+                           cfg.cdtype),
+            "v": jnp.zeros((ln, batch_size, max_len, kvh, cfg.head_dim),
+                           cfg.cdtype),
+            "xk": jnp.zeros((ln, batch_size, src_len, kvh, cfg.head_dim),
+                            cfg.cdtype),
+            "xv": jnp.zeros((ln, batch_size, src_len, kvh, cfg.head_dim),
+                            cfg.cdtype),
+        }
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = params["embed"].astype(cfg.cdtype)[tokens]
+        b = x.shape[0]
+        g = cfg.n_heads // cfg.n_kv_heads
+
+        def body(xc, xs):
+            lp, ck, cv, xk, xv = xs
+            h = rms_norm(xc, lp["ln1"], cfg.norm_eps)
+            out, new = A.gqa_decode(lp["attn"], h, cfg, cache_k=ck,
+                                    cache_v=cv, pos=pos,
+                                    window=GLOBAL_WINDOW)
+            xc = xc + out
+            # cross attention against precomputed memory K/V
+            h = rms_norm(xc, lp["ln_x"], cfg.norm_eps)
+            q, _, _ = A.gqa_project(lp["xattn"], h, cfg)
+            qg = q.reshape(b, cfg.n_kv_heads, g, cfg.head_dim) * \
+                cfg.head_dim ** -0.5
+            s = jnp.einsum("bkgd,bskd->bkgs", qg, xk,
+                           preferred_element_type=jnp.float32)
+            pattn = jax.nn.softmax(s, axis=-1).astype(xv.dtype)
+            ctx = jnp.einsum("bkgs,bskv->bkgv", pattn, xv,
+                             preferred_element_type=jnp.float32)
+            xc = xc + ctx.reshape(b, 1, -1).astype(xc.dtype) @ \
+                lp["xattn"]["wo"].astype(xc.dtype)
+            h = rms_norm(xc, lp["ln2"], cfg.norm_eps)
+            f = lp["ffn"]
+            xc = xc + swiglu(h, f["w1"].astype(h.dtype),
+                             f["w3"].astype(h.dtype),
+                             f["w2"].astype(h.dtype))
+            return xc, new
+
+        x, news = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        cache = dict(cache, k=news[0], v=news[1])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = constrain(x @ params["lm_head"].astype(cfg.cdtype),
+                           "batch", None, "tp")
+        return logits, cache

@@ -1,0 +1,3 @@
+from repro.serve.api import (  # noqa: F401
+    make_prefill, make_decode, generate, ServeSession,
+)

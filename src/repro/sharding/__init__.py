@@ -1,0 +1,4 @@
+from repro.sharding.api import (  # noqa: F401
+    constrain, gather_weight, shard_attn_acts, use_mesh, param_specs,
+    batch_specs, cache_specs, MeshRules, current_mesh,
+)

@@ -1,0 +1,295 @@
+"""Sharding rules: logical axes -> mesh axes, for params and activations.
+
+Production mesh axes (launch/mesh.py):
+  pod    outer data parallelism across pods (gradient sync crosses DCN)
+  data   inner data parallelism + FSDP weight sharding + spatial partitions
+  model  tensor parallelism (heads / ffn / experts / vocab)
+
+Rules map LOGICAL axis names to mesh axes. Parameters get 2-D sharding
+(FSDP over `data` x TP over `model`) so per-device state stays bounded at
+1000+-node scale; a dimension is sharded only when divisible by the mesh
+axis size (falls back to replication otherwise — e.g. kv_heads=2 on a
+16-way model axis).
+
+Activation constraints are applied through `constrain(x, *logical_axes)`,
+a no-op unless a mesh context is active (`use_mesh`), so model code stays
+pure and single-device tests never touch sharding machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Logical-axis -> mesh-axis mapping."""
+
+    batch: Tuple[str, ...] = ("pod", "data")   # batch dim of activations
+    fsdp: Tuple[str, ...] = ("data",)          # weight sharding (ZeRO-3)
+    tp: Tuple[str, ...] = ("model",)           # tensor parallelism
+    seq: Tuple[str, ...] = ("data",)           # sequence parallelism
+    tp_seq: Tuple[str, ...] = ("model",)       # seq-parallel fallback for
+    expert: Tuple[str, ...] = ("model",)       # indivisible head counts
+    none: Tuple[str, ...] = ()
+
+    def axes(self, name: Optional[str]):
+        if name is None:
+            return None
+        got = getattr(self, name)
+        return got if got else None
+
+
+def _mesh_axes_present(mesh: Mesh, axes) -> Tuple[str, ...]:
+    if axes is None:
+        return ()
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def spec_for(mesh: Mesh, rules: MeshRules, shape, logical):
+    """PartitionSpec for `shape` given per-dim logical names (or None).
+
+    Drops shardings that don't divide the dimension size.
+    """
+    entries = []
+    for dim, name in zip(shape, logical):
+        axes = _mesh_axes_present(mesh, rules.axes(name))
+        if axes and dim % _axis_size(mesh, axes) == 0:
+            entries.append(axes if len(axes) > 1 else axes[0])
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+# ---------------------------------------------------------------------------
+# activation constraint context
+# ---------------------------------------------------------------------------
+
+def use_mesh(mesh: Optional[Mesh], rules: Optional[MeshRules] = None):
+    """Context manager activating activation sharding constraints."""
+    class _Ctx:
+        def __enter__(self):
+            _CTX.mesh = mesh
+            _CTX.rules = rules or MeshRules()
+            return self
+
+        def __exit__(self, *exc):
+            _CTX.mesh = None
+            _CTX.rules = None
+            return False
+
+    return _Ctx()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_CTX, "mesh", None)
+
+
+def constrain(x, *logical):
+    """with_sharding_constraint by logical axis names; no-op w/o context."""
+    mesh = getattr(_CTX, "mesh", None)
+    if mesh is None:
+        return x
+    rules = _CTX.rules
+    spec = spec_for(mesh, rules, x.shape, logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def shard_attn_acts(x, ref_heads=None, enable_seq_fallback: bool = True):
+    """Sequence-TP fallback for (B, T, H, D) attention activations whose
+    head count does NOT divide the model axis (gemma3: 8 q / 4 kv heads
+    on 16-way TP). Without it, XLA shards head_dim across chips and
+    every attention contraction becomes a score all-reduce (146 GB/chip
+    measured on gemma prefill — EXPERIMENTS.md §Perf gemma iteration).
+
+    Deliberately a NO-OP when heads divide TP: the first version
+    constrained that case too and REGRESSED every head-divisible arch
+    20-60% (SPMD propagation interference; §Perf optimized-sweep note) —
+    the rule is "annotate only where propagation provably goes wrong".
+    """
+    mesh = getattr(_CTX, "mesh", None)
+    if mesh is None or x.ndim != 4 or not enable_seq_fallback:
+        return x
+    rules = _CTX.rules
+    tp = _mesh_axes_present(mesh, rules.tp)
+    tp_size = _axis_size(mesh, tp)
+    b, t, h, d = x.shape
+    # key the decision on the arch's QUERY head count so q/k/v stay
+    # consistently sharded (dbrx: q=48 divisible but kv=8 not — mixing
+    # head-TP q with seq-TP kv regressed tl 196 -> 805 s; measured)
+    h_ref = ref_heads if ref_heads is not None else h
+    # long sequences only: at train-scale seq (4k microbatches) the ring
+    # exchange costs more than the head_dim split it avoids (gemma train
+    # frac 0.034 -> 0.015 measured); at 32k prefill it wins 2.8-13x.
+    if (not tp or h_ref % tp_size == 0 or t % tp_size != 0 or
+            t < 8192):
+        return x
+    logical = ("batch", "tp_seq", None, None)
+    spec = spec_for(mesh, rules, x.shape, logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+WEIGHT_GATHER = {"on": False}
+
+
+def gather_weight(w, *logical):
+    """Use-time weight re-shard (explicit ZeRO-3 gather). Tried as §Perf
+    iteration 4 and REFUTED: constraining use-site copies to TP-only made
+    XLA replicate the expert einsum across the data axis (compute term
+    7.6 s -> 106 s on dbrx). Kept opt-in (WEIGHT_GATHER flag) for the
+    record; default is a no-op — the productive fix was re-sharding the
+    expert weights so the forward contraction dim is unsharded
+    (iteration 5 in _param_logical)."""
+    if not WEIGHT_GATHER["on"]:
+        return w
+    return constrain(w, *logical)
+
+
+# ---------------------------------------------------------------------------
+# parameter / batch / cache sharding trees
+# ---------------------------------------------------------------------------
+
+def _param_logical(path: str, shape) -> tuple:
+    """Logical axes for a parameter from its tree path + rank.
+
+    Conventions (see DESIGN.md §8): big matmul weights are FSDP x TP
+    sharded; expert tensors put the expert dim on `expert` (=model);
+    embeddings/heads shard the vocab on TP; vectors replicate.
+    """
+    nd = len(shape)
+    leaf = path.split("/")[-1]
+    if nd <= 1:
+        return (None,) * nd
+    if leaf in ("embed",):
+        return ("tp", "fsdp")
+    if leaf in ("lm_head",):
+        return ("fsdp", "tp")
+    if leaf in ("patch_proj", "frame_proj"):
+        return (None, "fsdp")
+    # expert weights: (expert->model) x (d->fsdp). §Perf iteration 5
+    # tried flipping the fsdp dim to the non-contracted side and was
+    # REFUTED (all-reduce 4.3 TB -> 14.7 TB: SPMD propagation re-derived
+    # worse activation shardings downstream); this layout measured best.
+    if leaf in ("we1", "we3"):               # (E, d, f)
+        return ("expert", "fsdp", None)
+    if leaf in ("we2",):                     # (E, f, d)
+        return ("expert", None, "fsdp")
+    if leaf in ("router",):
+        return (None, None)
+    if leaf in ("wq", "wk", "wv", "w_uq", "w_uk", "w_uv", "w1", "w3",
+                "ws1", "ws3", "ck", "wr", "wg", "wx", "wd2"):
+        return (None,) * (nd - 2) + ("fsdp", "tp")
+    if leaf in ("wo", "w2", "ws2", "cv"):
+        return (None,) * (nd - 2) + ("tp", "fsdp")
+    if leaf in ("w_dq", "w_dkv", "wd1", "wb", "wc", "wdt"):
+        return (None,) * (nd - 2) + ("fsdp", None)
+    if leaf in ("wk_rwkv",):
+        return (None,) * (nd - 2) + ("fsdp", "tp")
+    return (None,) * nd
+
+    # NOTE: scanned stacks have a leading layer dim handled by the caller.
+
+
+def param_specs(mesh: Mesh, rules: MeshRules, params) -> dict:
+    """Tree of NamedShardings matching the params tree."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+
+    def path_str(kp):
+        return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+
+    specs = {}
+    out = []
+    for kp, leaf in flat:
+        ps = path_str(kp)
+        shape = leaf.shape
+        stacked = ("layers" in ps or "layer s" in ps or
+                   "enc_layers" in ps or "dec_layers" in ps)
+        core = shape[1:] if stacked and len(shape) > 1 else shape
+        logical = _param_logical(ps, core)
+        if stacked and len(shape) > 1:
+            logical = (None,) + logical
+        spec = spec_for(mesh, rules, shape, logical)
+        specs[ps] = spec
+        out.append(NamedSharding(mesh, spec))
+    treedef = jax.tree_util.tree_structure(params)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_specs(mesh: Mesh, rules: MeshRules, batch) -> dict:
+    """Batch arrays: dim 0 = batch -> (pod, data)."""
+    def one(x):
+        logical = ("batch",) + (None,) * (x.ndim - 1)
+        return NamedSharding(mesh, spec_for(mesh, rules, x.shape, logical))
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+def cache_specs(mesh: Mesh, rules: MeshRules, cache) -> dict:
+    """Decode-cache sharding (greedy, per leaf).
+
+    Leaves are (L, B, S, KV, D) / (L, B, S, r) [mla] / (L, B, H, N, P)
+    [ssm] / (L, B, 1, d) [shift buffers]. Strategy:
+      1. shard B over as much of (pod, data) as divides it;
+      2. shard the heads dim (axis 3 of 5-D) over `model` when divisible
+         (kv-head TP);
+      3. spill remaining mesh axes onto the SEQUENCE dim (axis 2) —
+         sequence parallelism; this is what makes B=1 / 500k-context
+         caches fit a 16 GB chip, and what dbrx (kv=8 < model=16) needs.
+    """
+    batch_axes = _mesh_axes_present(mesh, rules.batch)
+    tp_axes = _mesh_axes_present(mesh, rules.tp)
+
+    def one(x):
+        if x.ndim < 3:
+            return NamedSharding(mesh, P())
+        entries = [None] * x.ndim
+        b = x.shape[1]
+        used_batch = []
+        prod = 1
+        for a in batch_axes:
+            if b % (prod * mesh.shape[a]) == 0:
+                used_batch.append(a)
+                prod *= mesh.shape[a]
+        if used_batch:
+            entries[1] = tuple(used_batch) if len(used_batch) > 1 else \
+                used_batch[0]
+        leftover = [a for a in batch_axes if a not in used_batch]
+        # heads TP (5-D KV caches)
+        tp_used = False
+        if x.ndim >= 5:
+            heads = x.shape[3]
+            sz = _axis_size(mesh, tp_axes)
+            if tp_axes and heads % sz == 0:
+                entries[3] = tuple(tp_axes) if len(tp_axes) > 1 else \
+                    tp_axes[0]
+                tp_used = True
+        # spill onto sequence dim
+        seq_axes = list(leftover) + ([] if tp_used else list(tp_axes))
+        seq_axes = [a for a in seq_axes
+                    if x.shape[2] % mesh.shape[a] == 0 and
+                    x.shape[2] >= mesh.shape[a]]
+        # keep divisibility for the combined product
+        picked = []
+        for a in seq_axes:
+            prod = int(np.prod([mesh.shape[u] for u in picked] or [1]))
+            if x.shape[2] % (prod * mesh.shape[a]) == 0:
+                picked.append(a)
+        if picked:
+            entries[2] = tuple(picked) if len(picked) > 1 else picked[0]
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map(one, cache)

@@ -1,0 +1,5 @@
+from repro.train.optimizer import (  # noqa: F401
+    AdamWState, adamw_init, adamw_update, cosine_schedule, clip_by_global_norm,
+)
+from repro.train.step import make_train_step  # noqa: F401
+from repro.train.loop import train_loop, TrainLoopConfig  # noqa: F401

@@ -1,0 +1,83 @@
+"""Gradient compression for cross-DCN (pod-axis) all-reduce.
+
+int8 block-quantized all-reduce with ERROR FEEDBACK: each worker keeps
+the quantization residual and folds it into the next step's gradient, so
+compression error accumulates to zero over time (EF-SGD guarantee). At
+1000+-node scale the pod-axis all-reduce crosses data-center links; 4x
+byte reduction there is the paper-agnostic distributed-optimization trick
+this framework ships (opt-in: TrainStep(compress_pod_grads=True) wiring
+shown in launch/train.py --compress).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize_int8(g) -> Tuple[jax.Array, jax.Array]:
+    """Per-block symmetric int8 quantization. Returns (q, scales)."""
+    flat = g.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale, shape):
+    out = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return out[:n].reshape(shape)
+
+
+def _block_scales(g):
+    flat = g.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    blocks = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    return blocks, jnp.maximum(
+        jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0, 1e-12)
+
+
+def ef_compress_grads(grads, residuals, axis_name):
+    """Error-feedback int8-compressed gradient sync (tree-wise).
+
+    Protocol (per block): share the MAX scale across the axis first
+    (pmax, tiny payload), quantize everyone against the shared scale,
+    then psum the int values — the integer sum is exactly the sum of the
+    quantized contributions, so the only error is local quantization,
+    which error feedback folds into the next step (EF-SGD guarantee).
+
+    Returns (synced_mean_grads, new_residuals).
+    """
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        blocks, scale = _block_scales(g32)
+        smax = jax.lax.pmax(scale, axis_name)
+        q = jnp.clip(jnp.round(blocks / smax), -127, 127)
+        recon = (q * smax).reshape(-1)[: g32.size].reshape(g32.shape)
+        new_r = g32 - recon
+        q32 = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        ssum = (q32 * smax).reshape(-1)[: g32.size].reshape(g32.shape)
+        n = jax.lax.psum(1, axis_name)
+        return (ssum / n).astype(g.dtype), new_r
+
+    flat_g, td = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    gs = jax.tree_util.tree_unflatten(td, [o[0] for o in out])
+    rs = jax.tree_util.tree_unflatten(td, [o[1] for o in out])
+    return gs, rs
+
+
+def init_residuals(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,76 @@
+"""AdamW (decoupled weight decay) + gradient clipping + LR schedules.
+
+Hand-rolled (no optax dependency): states are plain pytrees so the
+checkpoint layer and the sharding rules treat them exactly like params
+(m/v inherit the param sharding -> optimizer state is fully sharded,
+ZeRO-style, over fsdp x tp).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, b1=0.9,
+                 b2=0.95, eps=1e-8, weight_decay=0.1):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * (g * g)
+        mh = m2 / c1
+        vh = v2 / c2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(
+            jnp.float32)
+        return (p - lr * delta).astype(p.dtype), m2, v2
+
+    out = jax.tree_util.tree_map(upd, grads, state.m, state.v, params)
+    params2 = jax.tree_util.tree_map(lambda o: o[0], out,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    m2 = jax.tree_util.tree_map(lambda o: o[1], out,
+                                is_leaf=lambda x: isinstance(x, tuple))
+    v2 = jax.tree_util.tree_map(lambda o: o[2], out,
+                                is_leaf=lambda x: isinstance(x, tuple))
+    return params2, AdamWState(step=step, m=m2, v=v2)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+        grads), gn
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    t = step.astype(jnp.float32)
+    warm = peak_lr * t / max(warmup, 1)
+    frac = jnp.clip((t - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(t < warmup, warm, cos)

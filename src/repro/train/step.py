@@ -1,0 +1,124 @@
+"""Jitted train step with mesh sharding, microbatching, and remat.
+
+Parallelism (DESIGN.md §8): batch over (pod, data); params FSDP x TP over
+(data, model). XLA SPMD then emits, per layer: all-gather of the FSDP
+weight shard (overlappable with the previous layer's compute), local
+matmuls, reduce-scatter of weight grads over `data`, all-reduce of the
+(pod-replicated) gradient over `pod` — the hierarchical DP pattern that
+keeps cross-DCN traffic to one all-reduce per step at 1000+-node scale.
+
+Microbatching: lax.scan over microbatch slices accumulating f32 grads —
+keeps activation peaks ~1/n_micro while the optimizer sees the full
+global batch.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import (MeshRules, batch_specs, param_specs, use_mesh)
+from repro.train.optimizer import (adamw_update, clip_by_global_norm,
+                                   cosine_schedule)
+
+
+def make_train_step(model, *, mesh=None, rules: Optional[MeshRules] = None,
+                    n_micro: int = 1, peak_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10000,
+                    max_grad_norm: float = 1.0, donate: bool = True,
+                    bf16_weights: bool = False):
+    """Returns (step_fn, shard_in) where step_fn(params, opt, batch) ->
+    (params, opt, metrics).
+
+    bf16_weights: cast the param tree to bf16 ONCE per step, outside the
+    microbatch loop (gradients flow to the bf16 tree; AdamW keeps the
+    f32 master). FSDP weight all-gathers then move bf16, not f32 —
+    halving the collective term — and the per-use f32->bf16 converts
+    inside every layer disappear (§Perf iteration).
+    """
+    rules = rules or MeshRules()
+
+    def loss_fn(params, batch):
+        return model.train_loss(params, batch)
+
+    def constrain_like_params(g):
+        """Pin gradient sharding to the (FSDP x TP) param layout so the
+        per-microbatch gradient reduction lowers to reduce-scatter, not
+        a full-tensor all-reduce (measured 4.3 TB/chip/step on dbrx
+        without this — EXPERIMENTS.md §Perf iteration 3)."""
+        if mesh is None:
+            return g
+        specs = param_specs(mesh, rules, g)
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, g, specs)
+
+    def compute_grads(params, batch):
+        if n_micro == 1:
+            loss, g = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, constrain_like_params(g)
+        b = max(leaf.shape[0] for leaf in
+                jax.tree_util.tree_leaves(batch) if leaf.ndim >= 1)
+        assert b % n_micro == 0
+        mb = b // n_micro
+        sl = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_micro, mb) + a.shape[1:])
+            if a.ndim >= 1 and a.shape[0] == b else
+            jnp.broadcast_to(a, (n_micro,) + a.shape), batch)
+
+        def micro(carry, mbatch):
+            acc_loss, acc_g = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+            g = constrain_like_params(g)
+            acc_g = jax.tree_util.tree_map(
+                lambda a, x: a + x.astype(jnp.float32), acc_g, g)
+            return (acc_loss + l, constrain_like_params(acc_g)), None
+
+        zero_g = constrain_like_params(jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (loss, grads), _ = jax.lax.scan(micro, (jnp.float32(0), zero_g),
+                                        sl)
+        scale = 1.0 / n_micro
+        return loss * scale, jax.tree_util.tree_map(
+            lambda g: g * scale, grads)
+
+    def step(params, opt_state, batch):
+        with use_mesh(mesh, rules):
+            if bf16_weights:
+                params_c = jax.tree_util.tree_map(
+                    lambda p: p.astype(jnp.bfloat16)
+                    if p.dtype == jnp.float32 and p.ndim >= 2 else p,
+                    params)
+                loss, grads = compute_grads(params_c, batch)
+            else:
+                loss, grads = compute_grads(params, batch)
+            grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+            lr = cosine_schedule(opt_state.step, peak_lr=peak_lr,
+                                 warmup=warmup, total=total_steps)
+            params, opt_state = adamw_update(grads, opt_state, params,
+                                             lr=lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    import types
+    if mesh is None:
+        return types.SimpleNamespace(
+            jit=jax.jit(step, donate_argnums=(0, 1) if donate else ()),
+            raw=step, shard_in=None)
+
+    def shard_in(params, opt_state, batch):
+        from repro.train.optimizer import AdamWState
+        params = jax.device_put(params, param_specs(mesh, rules, params))
+        opt_state = AdamWState(
+            step=jax.device_put(opt_state.step),
+            m=jax.device_put(opt_state.m,
+                             param_specs(mesh, rules, opt_state.m)),
+            v=jax.device_put(opt_state.v,
+                             param_specs(mesh, rules, opt_state.v)))
+        batch = jax.device_put(batch, batch_specs(mesh, rules, batch))
+        return params, opt_state, batch
+
+    return types.SimpleNamespace(
+        jit=jax.jit(step, donate_argnums=(0, 1) if donate else ()),
+        raw=step, shard_in=shard_in)

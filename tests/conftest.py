@@ -1,0 +1,53 @@
+import os
+import sys
+
+# keep smoke tests on ONE device — the 512-device override belongs ONLY
+# to the dry-run (see launch/dryrun.py); distributed engine tests spawn
+# subprocesses with their own XLA_FLAGS.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+from hypothesis import settings
+
+settings.register_profile("fast", max_examples=25, deadline=None)
+settings.load_profile("fast")
+
+
+@pytest.fixture(scope="session")
+def small_spatial():
+    from repro.data import spatial as ds
+    x, y = ds.make("gaussian", 12000, seed=7)
+    return x, y
+
+
+@pytest.fixture(scope="session")
+def built_index(small_spatial):
+    from repro.core import build_index, fit
+    x, y = small_spatial
+    part = fit("kdtree", x, y, 12, seed=0)
+    return x, y, part, build_index(x, y, part)
+
+
+def range_oracle(x, y, rects):
+    return np.array([np.sum((x >= r[0]) & (x <= r[2]) &
+                            (y >= r[1]) & (y <= r[3])) for r in rects])
+
+
+def knn_oracle(x, y, qx, qy, k):
+    d2 = (x[None, :] - qx[:, None]) ** 2 + (y[None, :] - qy[:, None]) ** 2
+    return np.sort(d2, axis=1)[:, :k]
+
+
+def pip_oracle(px, py, poly, n):
+    inside = np.zeros(len(px), bool)
+    j = n - 1
+    for i in range(n):
+        xi, yi = poly[i]
+        xj, yj = poly[j]
+        c = (((yi > py) != (yj > py)) &
+             (px < (xj - xi) * (py - yi) / (yj - yi + 1e-30) + xi))
+        inside ^= c
+        j = i
+    return inside

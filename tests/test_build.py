@@ -1,0 +1,64 @@
+import numpy as np
+
+from repro.core import keys as K
+
+
+def test_layout_sorted_and_padded(built_index):
+    x, y, part, idx = built_index
+    keys = np.asarray(idx.key)
+    counts = np.asarray(idx.count)
+    sentinel = idx.key_spec.sentinel
+    for p in range(idx.num_partitions):
+        c = counts[p]
+        row = keys[p]
+        assert (np.diff(row[:c].astype(np.int64)) >= 0).all()
+        assert (row[c:] == sentinel).all()
+    assert counts.sum() == len(x)
+
+
+def test_vids_are_permutation(built_index):
+    x, y, part, idx = built_index
+    vid = np.asarray(idx.vid)
+    valid = vid[vid >= 0]
+    assert len(valid) == len(x)
+    assert len(np.unique(valid)) == len(x)
+
+
+def test_points_in_their_partition(built_index):
+    x, y, part, idx = built_index
+    bounds = np.asarray(idx.part_bounds)
+    xs = np.asarray(idx.x)
+    ys = np.asarray(idx.y)
+    counts = np.asarray(idx.count)
+    for p in range(idx.num_partitions - 1):  # skip overflow
+        c = counts[p]
+        if c == 0:
+            continue
+        bx = bounds[p]
+        assert (xs[p, :c] >= bx[0] - 1e-5).all()
+        assert (xs[p, :c] <= bx[2] + 1e-5).all()
+        assert (ys[p, :c] >= bx[1] - 1e-5).all()
+        assert (ys[p, :c] <= bx[3] + 1e-5).all()
+
+
+def test_keys_match_coords(built_index):
+    x, y, part, idx = built_index
+    p = 0
+    c = int(idx.count[0])
+    import jax.numpy as jnp
+    recomputed = K.make_keys(idx.x[p, :c], idx.y[p, :c], idx.key_spec)
+    assert (np.asarray(recomputed) == np.asarray(idx.key[p, :c])).all()
+
+
+def test_index_is_lightweight(built_index):
+    """Spline+radix model must be a small fraction of the data (the
+    paper's 'lightweight' claim). The radix tables are a fixed
+    (2^b + 2) x 4 bytes per partition; the data-dependent part (spline
+    knots) must stay well under 10% of the data."""
+    x, y, part, idx = built_index
+    data_bytes = len(x) * 4 * 3
+    sizes = idx.size_bytes()
+    radix_fixed = idx.radix_table.size * 4
+    assert sizes["local_model"] - radix_fixed < 0.10 * data_bytes
+    assert sizes["local_model"] < data_bytes
+    assert sizes["global_index"] < 4096

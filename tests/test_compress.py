@@ -1,0 +1,57 @@
+"""Gradient compression: quantization bounds + error-feedback recovery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.train.compress import (dequantize_int8, ef_compress_grads,
+                                  init_residuals, quantize_int8)
+
+
+@given(st.integers(1, 2000), st.integers(0, 5))
+@settings(max_examples=20)
+def test_quantize_error_bound(n, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(n) * 10.0 ** float(rng.integers(-3, 3)),
+                    jnp.float32)
+    q, s = quantize_int8(g)
+    back = dequantize_int8(q, s, g.shape)
+    # per-block error <= scale/2 = max|block|/254
+    blocks = np.asarray(jnp.pad(g, (0, (-n) % 256)).reshape(-1, 256))
+    bound = np.abs(blocks).max(axis=1) / 254.0 + 1e-9
+    err = np.abs(np.asarray(back) - np.asarray(g))
+    err_b = np.pad(err, (0, (-n) % 256)).reshape(-1, 256).max(axis=1)
+    assert (err_b <= bound * 1.01).all()
+
+
+def test_error_feedback_mean_converges():
+    """With EF, the time-average of compressed syncs converges to the
+    true mean gradient (EF-SGD property)."""
+    n_workers = 4
+    rng = np.random.default_rng(0)
+    true = rng.standard_normal((n_workers, 64)).astype(np.float32)
+
+    def one_round(res):
+        def worker(g, r):
+            gs, new_r = ef_compress_grads(
+                {"g": g}, {"g": r}, axis_name="pod")
+            return gs["g"], new_r["g"]
+
+        return jax.vmap(worker, axis_name="pod")(
+            jnp.asarray(true), res)
+
+    res = jnp.zeros((n_workers, 64), jnp.float32)
+    acc = np.zeros(64)
+    rounds = 30
+    for _ in range(rounds):
+        synced, res = one_round(res)
+        acc += np.asarray(synced[0])
+    avg = acc / rounds
+    want = true.mean(axis=0)
+    assert np.abs(avg - want).max() < 0.05
+
+
+def test_residual_shapes():
+    params = {"w": jnp.zeros((3, 4)), "b": jnp.zeros((7,))}
+    res = init_residuals(params)
+    assert res["w"].shape == (3, 4) and res["b"].shape == (7,)

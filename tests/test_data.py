@@ -1,0 +1,48 @@
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import spatial as ds
+from repro.data.tokens import TokenPipeline, input_specs, make_batch
+
+
+def test_pipeline_deterministic_and_skippable():
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    p1 = TokenPipeline(cfg, 2, 16, seed=3)
+    batches = [np.asarray(next(p1)["tokens"]) for _ in range(5)]
+    p2 = TokenPipeline(cfg, 2, 16, seed=3)
+    p2.skip_to(3)
+    assert (np.asarray(next(p2)["tokens"]) == batches[3]).all()
+
+
+def test_input_specs_match_batches():
+    import jax
+    for arch in ["qwen2.5-3b", "seamless-m4t-medium",
+                 "phi-3-vision-4.2b"]:
+        cfg = get_config(arch, smoke=True)
+        b = make_batch(cfg, 2, 64, seed=0)
+        s = input_specs(cfg, 2, 64)
+        assert set(b.keys()) == set(s.keys()), arch
+        for k in b:
+            assert tuple(b[k].shape) == tuple(s[k].shape), (arch, k)
+            assert b[k].dtype == s[k].dtype, (arch, k)
+
+
+@pytest.mark.parametrize("kind", ["uniform", "gaussian", "taxi"])
+def test_spatial_generators(kind):
+    x, y = ds.make(kind, 5000, seed=1)
+    assert len(x) == 5000 and x.dtype == np.float32
+    assert 0 <= x.min() and x.max() <= 1
+    x2, y2 = ds.make(kind, 5000, seed=1)
+    assert (x == x2).all()
+
+
+def test_rect_selectivity():
+    rects = ds.random_rects(100, 0.01, (0, 0, 1, 1), seed=0)
+    areas = (rects[:, 2] - rects[:, 0]) * (rects[:, 3] - rects[:, 1])
+    assert np.allclose(areas, 0.01, rtol=1e-4)
+
+
+def test_polygons_valid():
+    polys, ne = ds.random_polygons(20, (0, 0, 1, 1), seed=2)
+    assert (ne >= 3).all() and (ne <= 12).all()

@@ -1,0 +1,55 @@
+"""Distributed engine == single-device engine (8 fake devices).
+
+Runs in a SUBPROCESS because XLA device count must be set before jax
+initializes (conftest keeps the main test process at 1 device).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import *
+from repro.data import spatial as ds
+
+mesh = jax.make_mesh((8,), ("data",))
+x, y = ds.make("taxi", 20000, seed=2)
+part = fit("kdtree", x, y, 24)
+idx = build_index(x, y, part)
+single = SpatialEngine(idx)
+dist = SpatialEngine(idx, mesh=mesh, part_axis="data")
+dist2 = SpatialEngine(idx, mesh=jax.make_mesh((2, 4), ("pod", "data")),
+                      part_axis=("pod", "data"))
+
+rng = np.random.default_rng(0)
+qx = np.concatenate([x[:16], rng.random(16).astype(np.float32)])
+qy = np.concatenate([y[:16], rng.random(16).astype(np.float32)])
+rects = ds.random_rects(16, 1e-3, part.bounds, seed=3, centers=(x, y))
+polys, ne = ds.random_polygons(8, part.bounds, seed=5)
+
+for eng in (dist, dist2):
+    assert (np.asarray(eng.point_query(qx, qy)) ==
+            np.asarray(single.point_query(qx, qy))).all()
+    assert (np.asarray(eng.range_count(rects)) ==
+            np.asarray(single.range_count(rects))).all()
+    d2a, _ = eng.knn(qx[:8], qy[:8], 7, mode="pruned")
+    d2b, _ = single.knn(qx[:8], qy[:8], 7, mode="exact")
+    assert np.allclose(np.sort(np.asarray(d2a), 1),
+                       np.sort(np.asarray(d2b), 1), rtol=1e-5)
+    assert (np.asarray(eng.join_count(polys, ne)) ==
+            np.asarray(single.join_count(polys, ne))).all()
+print("DIST-OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_engine_matches_single():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "DIST-OK" in out.stdout, out.stdout + out.stderr

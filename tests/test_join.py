@@ -1,0 +1,44 @@
+import numpy as np
+
+from conftest import pip_oracle
+from repro.core import SpatialEngine
+from repro.data import spatial as ds
+
+
+def test_join_counts_exact(built_index):
+    x, y, part, idx = built_index
+    eng = SpatialEngine(idx)
+    polys, ne = ds.random_polygons(12, part.bounds, seed=3)
+    got = np.asarray(eng.join_count(polys, ne))
+    want = np.array([pip_oracle(x, y, polys[i], ne[i]).sum()
+                     for i in range(len(ne))])
+    assert (got == want).all()
+
+
+def test_join_degenerate_polygons(built_index):
+    x, y, part, idx = built_index
+    eng = SpatialEngine(idx)
+    # triangle far outside data
+    polys = np.zeros((2, 12, 2), np.float32)
+    polys[0, :3] = [[5, 5], [6, 5], [5.5, 6]]
+    # big square covering everything
+    b = part.bounds
+    polys[1, :4] = [[b[0] - 1, b[1] - 1], [b[2] + 1, b[1] - 1],
+                    [b[2] + 1, b[3] + 1], [b[0] - 1, b[3] + 1]]
+    ne = np.asarray([3, 4], np.int32)
+    got = np.asarray(eng.join_count(polys, ne))
+    assert got[0] == 0
+    assert got[1] == len(x)
+
+
+def test_join_concave_polygon(built_index):
+    x, y, part, idx = built_index
+    eng = SpatialEngine(idx)
+    # concave "L" shape in data space
+    polys = np.zeros((1, 12, 2), np.float32)
+    polys[0, :6] = [[0.2, 0.2], [0.8, 0.2], [0.8, 0.5], [0.5, 0.5],
+                    [0.5, 0.8], [0.2, 0.8]]
+    ne = np.asarray([6], np.int32)
+    got = int(eng.join_count(polys, ne)[0])
+    want = int(pip_oracle(x, y, polys[0], 6).sum())
+    assert got == want

@@ -1,0 +1,51 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import keys as K
+
+
+def test_spread_compact_roundtrip():
+    v = jnp.arange(0, 1 << 12, dtype=jnp.uint32)
+    assert (K.compact_bits(K.spread_bits(v)) == v).all()
+
+
+def test_morton_roundtrip():
+    rng = np.random.default_rng(0)
+    qx = jnp.asarray(rng.integers(0, 1 << 11, 1000), jnp.uint32)
+    qy = jnp.asarray(rng.integers(0, 1 << 11, 1000), jnp.uint32)
+    dx, dy = K.morton_decode(K.morton_encode(qx, qy))
+    assert (dx == qx).all() and (dy == qy).all()
+
+
+@given(st.integers(0, 2047), st.integers(0, 2047),
+       st.integers(0, 2047), st.integers(0, 2047))
+def test_morton_jointly_monotone(x1, y1, dx, dy):
+    """x1<=x2 and y1<=y2 => z1 <= z2 — the property that makes the
+    morton interval [z(lo), z(hi)] cover a rectangle (paper §4.2)."""
+    x2 = min(x1 + dx, 2047)
+    y2 = min(y1 + dy, 2047)
+    z1 = int(K.morton_encode(jnp.uint32(x1), jnp.uint32(y1)))
+    z2 = int(K.morton_encode(jnp.uint32(x2), jnp.uint32(y2)))
+    assert z1 <= z2
+
+
+def test_rect_key_range_covers_members():
+    spec = K.KeySpec(bounds=(0.0, 0.0, 1.0, 1.0))
+    rng = np.random.default_rng(1)
+    pts = rng.random((500, 2)).astype(np.float32)
+    rect = jnp.asarray([0.2, 0.3, 0.6, 0.7], jnp.float32)
+    klo, khi = K.rect_key_range(rect, spec)
+    keys = K.make_keys(jnp.asarray(pts[:, 0]), jnp.asarray(pts[:, 1]),
+                       spec)
+    inside = ((pts[:, 0] >= 0.2) & (pts[:, 0] <= 0.6) &
+              (pts[:, 1] >= 0.3) & (pts[:, 1] <= 0.7))
+    k = np.asarray(keys)
+    assert (k[inside] >= int(klo)).all() and (k[inside] <= int(khi)).all()
+
+
+def test_keys_exact_in_f32():
+    spec = K.KeySpec()
+    assert spec.key_bits <= 24
+    big = jnp.uint32((1 << spec.key_bits) - 1)
+    assert int(K.keys_to_f32(big)) == int(big)

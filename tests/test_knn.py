@@ -1,0 +1,47 @@
+import numpy as np
+import pytest
+
+from conftest import knn_oracle
+from repro.core import SpatialEngine
+
+
+@pytest.fixture(scope="module")
+def engine(built_index):
+    x, y, part, idx = built_index
+    return x, y, SpatialEngine(idx)
+
+
+@pytest.mark.parametrize("k", [1, 5, 10, 32])
+@pytest.mark.parametrize("mode", ["exact", "pruned"])
+def test_knn_exactness(engine, k, mode):
+    x, y, eng = engine
+    rng = np.random.default_rng(k)
+    ix = rng.integers(0, len(x), 16)
+    qx, qy = x[ix], y[ix]
+    d2, vid = eng.knn(qx, qy, k, mode=mode)
+    got = np.sort(np.asarray(d2), axis=1)
+    want = knn_oracle(x, y, qx, qy, k)
+    assert np.allclose(got, want, rtol=1e-5, atol=1e-10)
+    # returned ids actually achieve those distances
+    vid = np.asarray(vid)
+    for i in range(len(qx)):
+        dd = (x[vid[i]] - qx[i]) ** 2 + (y[vid[i]] - qy[i]) ** 2
+        assert np.allclose(np.sort(dd), want[i], rtol=1e-5, atol=1e-10)
+
+
+def test_knn_far_query(engine):
+    """Query far outside the data bounds must still be exact (radius
+    expansion loop, paper Eq. 3 bound)."""
+    x, y, eng = engine
+    qx = np.asarray([5.0, -3.0], np.float32)
+    qy = np.asarray([5.0, -3.0], np.float32)
+    d2, _ = eng.knn(qx, qy, 3, mode="pruned")
+    want = knn_oracle(x, y, qx, qy, 3)
+    assert np.allclose(np.sort(np.asarray(d2), axis=1), want, rtol=1e-5)
+
+
+def test_knn_duplicate_points(engine):
+    x, y, eng = engine
+    qx, qy = x[:4], y[:4]  # exact data points: d2[0] == 0
+    d2, _ = eng.knn(qx, qy, 2)
+    assert np.allclose(np.min(np.asarray(d2), axis=1), 0.0, atol=1e-12)

@@ -1,0 +1,44 @@
+"""MLA: absorbed-form decode must equal expanded-form attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+from repro.models.common import ModelConfig, init_params
+
+
+def test_absorbed_decode_equals_expanded():
+    cfg = ModelConfig(
+        name="mla-test", vocab=64, d_model=32, n_layers=1, n_heads=4,
+        n_kv_heads=4, attn="mla", q_lora=0, kv_lora=16, qk_nope_dim=8,
+        qk_rope_dim=4, v_head_dim=8, d_ff=64, compute_dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    p = params["layers"]
+    p = jax.tree_util.tree_map(lambda a: a[0], p)["attn"]
+    rng = np.random.default_rng(0)
+    t = 9
+    x = jnp.asarray(rng.standard_normal((2, t, 32)), jnp.float32)
+    positions = jnp.arange(t, dtype=jnp.int32)
+    out_full, (c, krope) = A.mla_attn(p, x, cfg, positions=positions)
+
+    # decode the last token against the cache of the first t-1
+    cache_c = jnp.zeros((2, t, cfg.kv_lora), jnp.float32
+                        ).at[:, : t - 1].set(c[:, : t - 1])
+    cache_r = jnp.zeros((2, t, cfg.qk_rope_dim), jnp.float32
+                        ).at[:, : t - 1].set(krope[:, : t - 1])
+    out_dec, _ = A.mla_decode(p, x[:, t - 1:], cfg, cache_c=cache_c,
+                              cache_rope=cache_r,
+                              pos=jnp.int32(t - 1))
+    diff = float(jnp.max(jnp.abs(out_dec[:, 0] - out_full[:, -1])))
+    assert diff < 1e-4, diff
+
+
+def test_mla_cache_is_compressed():
+    """The MLA decode cache must be r+rope floats per token — much
+    smaller than the 2*H*D GQA equivalent (paper: the reason deepseek
+    serves long contexts)."""
+    cfg = ModelConfig(n_heads=16, n_kv_heads=16, head_dim=128,
+                      attn="mla", kv_lora=512, qk_rope_dim=64)
+    mla_per_tok = cfg.kv_lora + cfg.qk_rope_dim
+    gqa_per_tok = 2 * cfg.n_kv_heads * cfg.head_dim
+    assert mla_per_tok * 7 < gqa_per_tok

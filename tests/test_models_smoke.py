@@ -1,0 +1,111 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+output shapes + no NaNs + decode/prefill consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.data.tokens import make_batch
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def states():
+    return {}
+
+
+def _setup(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 2, 32, seed=1)
+    return cfg, model, params, batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_finite(arch):
+    cfg, model, params, batch = _setup(arch)
+    loss = jax.jit(model.train_loss)(params, batch)
+    assert jnp.isfinite(loss), f"{arch} loss not finite"
+    # one optimizer step moves the loss
+    from repro.train import make_train_step
+    from repro.train.optimizer import adamw_init
+    step = make_train_step(model, peak_lr=1e-3, warmup=1, total_steps=10)
+    p2, opt2, m = step.jit(params, adamw_init(params), batch)
+    assert jnp.isfinite(m["loss"])
+    assert float(m["grad_norm"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg, model, params, batch = _setup(arch)
+    if cfg.family == "encdec":
+        tgt = batch["tokens"]
+        lg_full, _, _ = model.forward(params, batch)
+        b1 = dict(batch, tokens=tgt[:, :-1])
+        _, cache = model.prefill(params, b1, max_len=tgt.shape[1])
+        lg_dec, _ = model.decode_step(params, cache, tgt[:, -1:],
+                                      jnp.int32(tgt.shape[1] - 1))
+    elif cfg.family == "rwkv6":
+        lg_full, _ = model._forward(params, batch["tokens"],
+                                    model.init_state(2))
+        b1 = dict(batch, tokens=batch["tokens"][:, :-1])
+        _, cache = model.prefill(params, b1)
+        lg_dec, _ = model.decode_step(params, cache,
+                                      batch["tokens"][:, -1:], None)
+    else:
+        ntok = batch["tokens"].shape[1]
+        off = cfg.n_patches if cfg.patch_input else 0
+        lg_full = model.forward(params, batch)[0]
+        b1 = dict(batch, tokens=batch["tokens"][:, :-1])
+        _, cache = model.prefill(params, b1, max_len=off + ntok)
+        lg_dec, _ = model.decode_step(params, cache,
+                                      batch["tokens"][:, -1:],
+                                      jnp.int32(off + ntok - 1))
+    diff = float(jnp.max(jnp.abs(lg_dec[:, 0] - lg_full[:, -1])))
+    assert diff < 0.05, f"{arch}: decode diverges from forward ({diff})"
+
+
+@pytest.mark.parametrize("arch", ["gemma3_4b", "hymba_1_5b"])
+def test_sliding_window_pattern(arch):
+    cfg = get_config(arch, smoke=True)
+    wins = [cfg.window_for_layer(i) for i in range(cfg.n_layers)]
+    assert 0 in wins, "needs at least one global layer"
+    assert cfg.window in wins, "needs local layers"
+
+
+def test_full_configs_match_assignment():
+    """Spot-check the published hyperparameters."""
+    c = get_config("deepseek-v2-lite-16b")
+    assert (c.n_layers, c.d_model, c.n_heads) == (27, 2048, 16)
+    assert c.kv_lora == 512 and c.moe and c.top_k == 6
+    c = get_config("dbrx-132b")
+    assert (c.n_layers, c.d_model, c.n_experts, c.top_k) == \
+        (40, 6144, 16, 4)
+    c = get_config("rwkv6-3b")
+    assert c.family == "rwkv6" and c.d_model == 2560 and c.n_layers == 32
+    c = get_config("gemma3-4b")
+    assert c.vocab == 262144 and c.global_every == 6
+    c = get_config("qwen2.5-3b")
+    assert c.qkv_bias and c.n_kv_heads == 2
+    c = get_config("internlm2-20b")
+    assert c.d_ff == 16384 and c.vocab == 92544
+    c = get_config("minicpm3-4b")
+    assert c.attn == "mla" and c.n_layers == 62
+    c = get_config("seamless-m4t-medium")
+    assert c.enc_layers == 12 and c.dec_layers == 12 and \
+        c.vocab == 256206
+    c = get_config("hymba-1.5b")
+    assert c.ssm_state == 16 and c.n_heads == 25
+    c = get_config("phi-3-vision-4.2b")
+    assert c.patch_input and c.d_model == 3072
+
+
+@pytest.mark.parametrize("arch", ["qwen2_5_3b", "deepseek_v2_lite_16b"])
+def test_param_count_scale(arch):
+    """Full configs land near their published parameter counts."""
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    target = {"qwen2_5_3b": 3.1e9, "deepseek_v2_lite_16b": 15.7e9}[arch]
+    assert 0.7 * target < n < 1.35 * target, n

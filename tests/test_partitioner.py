@@ -1,0 +1,62 @@
+import numpy as np
+import pytest
+
+from repro.core import STRATEGIES, fit
+from repro.core.build import assign_partitions
+import jax.numpy as jnp
+
+
+@pytest.mark.parametrize("kind", list(STRATEGIES))
+@pytest.mark.parametrize("gen", ["uniform", "gaussian", "taxi"])
+def test_every_point_gets_a_partition(kind, gen):
+    from repro.data import spatial as ds
+    x, y = ds.make(gen, 5000, seed=3)
+    part = fit(kind, x, y, 16, seed=1)
+    pid = np.asarray(assign_partitions(
+        jnp.asarray(x), jnp.asarray(y),
+        jnp.asarray(part.partition_bounds()[:-1])))
+    assert pid.min() >= 0
+    assert pid.max() <= part.num_grids  # overflow id == num_grids
+    # tiling partitioners should rarely overflow; rtree may (paper §3.1)
+    frac_overflow = np.mean(pid == part.num_grids)
+    if kind in ("fixed", "adaptive", "kdtree", "quadtree"):
+        assert frac_overflow < 0.01
+    assert len(pid) == len(x)
+
+
+def test_rtree_overflow_grid_exists():
+    """Bottom-up STR leaves bound only the sample -> some points overflow
+    (the paper's novel overflow-grid concept)."""
+    from repro.data import spatial as ds
+    x, y = ds.make("uniform", 20000, seed=5)
+    part = fit("rtree", x, y, 16, sample_rate=0.005, seed=2)
+    pid = np.asarray(assign_partitions(
+        jnp.asarray(x), jnp.asarray(y),
+        jnp.asarray(part.partition_bounds()[:-1])))
+    assert (pid == part.num_grids).sum() > 0
+
+
+@pytest.mark.parametrize("kind", list(STRATEGIES))
+def test_boxes_are_valid(kind):
+    from repro.data import spatial as ds
+    x, y = ds.make("gaussian", 4000, seed=9)
+    part = fit(kind, x, y, 9, seed=1)
+    b = part.boxes
+    assert (b[:, 0] <= b[:, 2]).all() and (b[:, 1] <= b[:, 3]).all()
+    assert part.num_partitions == part.num_grids + 1
+
+
+def test_balance_kdtree_better_than_fixed_on_skew():
+    """Spatial-aware partitioning is the paper's load-balance mechanism."""
+    from repro.data import spatial as ds
+    x, y = ds.make("gaussian", 30000, seed=11)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+
+    def imbalance(kind):
+        part = fit(kind, x, y, 16, seed=1)
+        pid = np.asarray(assign_partitions(
+            xj, yj, jnp.asarray(part.partition_bounds()[:-1])))
+        counts = np.bincount(pid, minlength=part.num_partitions)
+        return counts.max() / max(counts.mean(), 1)
+
+    assert imbalance("kdtree") < imbalance("fixed")

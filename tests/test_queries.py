@@ -1,0 +1,85 @@
+import numpy as np
+import pytest
+
+from conftest import range_oracle
+from repro.core import SpatialEngine, build_index, fit
+from repro.data import spatial as ds
+
+
+@pytest.fixture(scope="module")
+def engine(built_index):
+    x, y, part, idx = built_index
+    return x, y, part, SpatialEngine(idx)
+
+
+def test_point_query_exact(engine):
+    x, y, part, eng = engine
+    rng = np.random.default_rng(0)
+    qx = np.concatenate([x[:40], rng.random(40).astype(np.float32) * 2])
+    qy = np.concatenate([y[:40], rng.random(40).astype(np.float32) * 2])
+    found = np.asarray(eng.point_query(qx, qy))
+    truth = np.array([np.any((x == a) & (y == b))
+                      for a, b in zip(qx, qy)])
+    assert (found == truth).all()
+
+
+@pytest.mark.parametrize("sel", [1e-5, 1e-3, 1e-1])
+def test_range_count_exact(engine, sel):
+    x, y, part, eng = engine
+    rects = ds.random_rects(24, sel, part.bounds, seed=int(sel * 1e6),
+                            centers=(x, y))
+    got = np.asarray(eng.range_count(rects))
+    assert (got == range_oracle(x, y, rects)).all()
+
+
+def test_range_query_window_materializes(engine):
+    x, y, part, eng = engine
+    rects = ds.random_rects(16, 1e-4, part.bounds, seed=5,
+                            centers=(x, y))
+    cnt, vids, ok = eng.range_query(rects)
+    assert bool(np.asarray(ok).all())
+    want = range_oracle(x, y, rects)
+    assert (np.asarray(cnt) == want).all()
+    # materialized ids must be the actual in-rect points
+    vids = np.asarray(vids)
+    for i, r in enumerate(rects):
+        got_ids = set(vids[i][vids[i] >= 0])
+        truth = set(np.where((x >= r[0]) & (x <= r[2]) &
+                             (y >= r[1]) & (y <= r[3]))[0])
+        assert got_ids == truth
+
+
+def test_empty_and_full_ranges(engine):
+    x, y, part, eng = engine
+    b = part.bounds
+    rects = np.asarray([
+        [2.0, 2.0, 3.0, 3.0],                 # fully outside
+        [b[0], b[1], b[2], b[3]],             # everything
+    ], np.float32)
+    got = np.asarray(eng.range_count(rects))
+    assert got[0] == 0
+    assert got[1] == len(x)
+
+
+def test_circle_count(engine):
+    x, y, part, eng = engine
+    rng = np.random.default_rng(2)
+    ix = rng.integers(0, len(x), 12)
+    cx, cy = x[ix], y[ix]
+    r = np.full(12, 0.05, np.float32)
+    got = np.asarray(eng.circle_count(cx, cy, r))
+    truth = np.array([np.sum((x - a) ** 2 + (y - b) ** 2 <= 0.05 ** 2)
+                      for a, b in zip(cx, cy)])
+    assert (got == truth).all()
+
+
+@pytest.mark.parametrize("kind", ["fixed", "adaptive", "quadtree",
+                                  "rtree"])
+def test_all_partitioners_give_exact_ranges(small_spatial, kind):
+    x, y = small_spatial
+    part = fit(kind, x, y, 10, seed=4)
+    eng = SpatialEngine(build_index(x, y, part))
+    rects = ds.random_rects(12, 1e-3, part.bounds, seed=8,
+                            centers=(x, y))
+    got = np.asarray(eng.range_count(rects))
+    assert (got == range_oracle(x, y, rects)).all()

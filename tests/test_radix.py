@@ -1,0 +1,51 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.radix import build_radix, radix_locate, \
+    windowed_segment_search
+from repro.core.spline import build_spline
+
+
+@given(st.lists(st.integers(0, (1 << 22) - 1), min_size=4, max_size=300),
+       st.integers(2, 10))
+@settings(max_examples=30)
+def test_radix_window_contains_successor(keys, bits):
+    """For any query key, the radix window [T[j], T[j+1]] must contain
+    the successor knot (first knot >= key) — paper Alg. 2 contract."""
+    keys = np.sort(np.unique(np.asarray(keys, np.int64)))
+    if len(keys) < 2:
+        return
+    kf = jnp.asarray(keys, jnp.float32)
+    sp = build_spline(kf, jnp.ones(len(keys), bool), eps=4,
+                      m_pad=len(keys) + 2)
+    n = int(sp["n_knots"])
+    rad = build_radix(sp["knot_keys"], sp["n_knots"], bits=bits)
+    queries = jnp.asarray(
+        np.unique(np.concatenate([keys, keys + 1, keys - 1])).clip(
+            0, (1 << 22) - 1), jnp.float32)
+    lo, hi = radix_locate(rad, queries, sp["n_knots"], bits=bits)
+    kk = np.asarray(sp["knot_keys"])[:n]
+    for q, l, h in zip(np.asarray(queries), np.asarray(lo),
+                       np.asarray(hi)):
+        succ = np.searchsorted(kk, q, side="left")
+        if succ >= n:
+            continue  # beyond all knots: clamped segment is fine
+        assert l <= succ <= h + 1
+
+
+def test_windowed_segment_matches_searchsorted():
+    rng = np.random.default_rng(0)
+    keys = np.sort(rng.choice(1 << 22, 500, replace=False))
+    kf = jnp.asarray(keys, jnp.float32)
+    sp = build_spline(kf, jnp.ones(len(keys), bool), eps=16, m_pad=600)
+    rad = build_radix(sp["knot_keys"], sp["n_knots"], bits=8)
+    q = jnp.asarray(rng.integers(0, 1 << 22, 200), jnp.float32)
+    lo, hi = radix_locate(rad, q, sp["n_knots"], bits=8)
+    seg = windowed_segment_search(sp["knot_keys"], q, lo, hi)
+    n = int(sp["n_knots"])
+    kk = np.asarray(sp["knot_keys"])[:n]
+    want = np.clip(np.searchsorted(kk, np.asarray(q), side="right") - 1,
+                   0, n - 2)
+    got = np.clip(np.asarray(seg), 0, n - 2)
+    assert (got == want).all()

@@ -1,0 +1,62 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.tokens import make_batch
+from repro.models import build_model
+from repro.serve import ServeSession, generate
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_greedy_generate_deterministic(qwen):
+    cfg, model, params = qwen
+    batch = make_batch(cfg, 2, 16, seed=1)
+    b = {"tokens": batch["tokens"]}
+    out1 = generate(model, params, b, steps=8)
+    out2 = generate(model, params, b, steps=8)
+    assert out1.shape == (2, 8)
+    assert (np.asarray(out1) == np.asarray(out2)).all()
+
+
+def test_generate_matches_stepwise_forward(qwen):
+    """Greedy decode must equal greedy argmax over repeated fwd passes."""
+    cfg, model, params = qwen
+    toks = make_batch(cfg, 1, 8, seed=2)["tokens"]
+    out = np.asarray(generate(model, params, {"tokens": toks}, steps=4))
+    cur = np.asarray(toks)
+    for i in range(4):
+        logits = model.forward(params, {"tokens": jnp.asarray(cur)})[0]
+        nxt = int(jnp.argmax(logits[0, -1]))
+        assert nxt == out[0, i], f"token {i}"
+        cur = np.concatenate([cur, [[nxt]]], axis=1)
+
+
+def test_serve_session_steps(qwen):
+    cfg, model, params = qwen
+    sess = ServeSession(model, params, batch_size=4, max_len=32)
+    tok = jnp.zeros((4, 1), jnp.int32)
+    for _ in range(3):
+        logits = sess.step(tok)
+        assert logits.shape == (4, 1, cfg.vocab)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(
+            jnp.int32)
+    assert int(sess.pos[0]) == 3
+
+
+def test_rwkv_session_state_based():
+    cfg = get_config("rwkv6-3b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sess = ServeSession(model, params, batch_size=2, max_len=8)
+    tok = jnp.ones((2, 1), jnp.int32)
+    logits = sess.step(tok)
+    assert logits.shape == (2, 1, cfg.vocab)

@@ -1,0 +1,73 @@
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.sharding.api import (MeshRules, cache_specs, param_specs,
+                                spec_for)
+
+
+def fake_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
+    """An abstract mesh over repeated devices (spec logic only)."""
+    devs = np.asarray(jax.devices() * int(np.prod(shape)))[
+        : int(np.prod(shape))].reshape(shape)
+    return Mesh(devs, axes)
+
+
+def test_spec_for_divisibility():
+    mesh = fake_mesh()
+    rules = MeshRules()
+    # divisible dims shard; indivisible fall back to replication
+    s = spec_for(mesh, rules, (8, 6), ("fsdp", "tp"))
+    assert s == P("data", "model")
+    s = spec_for(mesh, rules, (7, 6), ("fsdp", "tp"))
+    assert s == P(None, "model")
+    s = spec_for(mesh, rules, (8, 4096), ("batch", None))
+    assert s == P(("pod", "data"))
+
+
+def test_param_specs_rules():
+    mesh = fake_mesh()
+    rules = MeshRules()
+    import jax.numpy as jnp
+    params = {
+        "embed": jnp.zeros((64, 32)),
+        "layers": {"attn": {"wq": jnp.zeros((4, 32, 64))},
+                   "moe": {"we1": jnp.zeros((4, 8, 32, 64))}},
+    }
+    specs = param_specs(mesh, rules, params)
+    assert specs["embed"].spec == P("model", "data")
+    # stacked (L, d, H*hd): layer dim replicated, fsdp x tp on the rest
+    assert specs["layers"]["attn"]["wq"].spec == P(None, "data", "model")
+    # experts on model, d on fsdp (trailing None trimmed)
+    assert specs["layers"]["moe"]["we1"].spec == P(None, "model", "data")
+
+
+def test_cache_specs_decode_32k_kv_indivisible():
+    """dbrx-style: kv=8 < model=16 -> heads replicate, SEQ takes model."""
+    mesh = fake_mesh((2, 4), ("data", "model"))
+    rules = MeshRules()
+    import jax.numpy as jnp
+    cache = {"k": jnp.zeros((4, 8, 64, 2, 16))}  # (L,B,S,KV=2? ->
+    specs = cache_specs(mesh, rules, cache)
+    sp = specs["k"].spec
+    assert sp[1] == "data"          # batch 8 % 2 == 0
+    # kv=2 not divisible by model=4 -> seq picks up model
+    assert sp[2] == "model" and (len(sp) < 4 or sp[3] is None)
+
+
+def test_cache_specs_b1_seq_spill():
+    mesh = fake_mesh((2, 2, 2), ("pod", "data", "model"))
+    rules = MeshRules()
+    import jax.numpy as jnp
+    cache = {"k": jnp.zeros((2, 1, 64, 4, 8))}   # B=1, kv=4 % 2 == 0
+    sp = cache_specs(mesh, rules, cache)["k"].spec
+    assert sp[1] is None                         # B=1 unshardable
+    assert sp[2] == ("pod", "data")              # seq spill
+    assert sp[3] == "model"                      # kv TP
+
+
+def test_constrain_noop_without_context():
+    import jax.numpy as jnp
+    from repro.sharding import constrain
+    x = jnp.zeros((4, 4))
+    assert constrain(x, "batch", None) is x

@@ -1,0 +1,63 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.spline import build_spline, spline_predict
+
+
+def _fit(keys_sorted, eps=8, m_pad=None):
+    n = len(keys_sorted)
+    kf = jnp.asarray(keys_sorted, jnp.float32)
+    valid = jnp.ones(n, bool)
+    return build_spline(kf, valid, eps=eps, m_pad=m_pad or n + 2)
+
+
+@given(st.lists(st.integers(0, (1 << 22) - 1), min_size=2, max_size=400))
+@settings(max_examples=30)
+def test_error_bound_property(keys):
+    """|S(key) - first_occurrence_rank| <= eps for every data key —
+    the paper's core invariant (eps-bounded spline, §3.2)."""
+    keys = np.sort(np.asarray(keys, np.int64))
+    eps = 4
+    sp = _fit(keys, eps=eps)
+    assert not bool(sp["overflow"])
+    kf = jnp.asarray(keys, jnp.float32)
+    pred = spline_predict(sp["knot_keys"], sp["knot_pos"],
+                          sp["n_knots"], kf)
+    first_pos = np.searchsorted(keys, keys, side="left")
+    err = np.abs(np.asarray(pred) - first_pos)
+    assert err.max() <= eps + 1.0  # +1 f32 rounding headroom
+
+
+def test_knots_monotone_and_compact():
+    rng = np.random.default_rng(3)
+    keys = np.sort(rng.integers(0, 1 << 22, 5000))
+    sp = _fit(keys, eps=32)
+    n = int(sp["n_knots"])
+    kk = np.asarray(sp["knot_keys"])[:n]
+    assert (np.diff(kk) > 0).all()
+    # learned index is SMALL relative to data (lightweight claim)
+    assert n < len(keys) / 4
+
+
+def test_max_run_counts_duplicates():
+    keys = np.asarray([1, 1, 1, 2, 3, 3, 7, 7, 7, 7, 9])
+    sp = _fit(keys, eps=4)
+    assert int(sp["max_run"]) == 4
+
+
+def test_single_key_partition():
+    sp = _fit(np.asarray([5, 5, 5]), eps=2)
+    pred = spline_predict(sp["knot_keys"], sp["knot_pos"], sp["n_knots"],
+                          jnp.float32(5.0))
+    assert abs(float(pred) - 0.0) <= 2
+
+
+def test_overflow_flag():
+    # eps=0 on NON-collinear keys forces ~a knot per key; m_pad too
+    # small -> overflow flag (build_index raises on it)
+    rng = np.random.default_rng(0)
+    keys = np.cumsum(rng.integers(1, 9, 100))
+    kf = jnp.asarray(keys, jnp.float32)
+    sp = build_spline(kf, jnp.ones(100, bool), eps=0, m_pad=10)
+    assert bool(sp["overflow"])

@@ -1,0 +1,111 @@
+"""End-to-end behaviour tests: the paper's full pipeline on one node.
+
+Generate city-scale-ish data -> partition -> build the learned index ->
+serve a mixed query workload -> verify every result against oracles, and
+check the paper's qualitative claims (build scaling; learned interval <<
+partition size; index survives checkpoint/restart).
+"""
+import time
+
+import numpy as np
+import pytest
+
+from conftest import knn_oracle, pip_oracle, range_oracle
+from repro.core import SpatialEngine, build_index, fit
+from repro.core import queries as Q
+from repro.core import keys as K
+from repro.data import spatial as ds
+
+
+@pytest.fixture(scope="module")
+def system():
+    x, y = ds.make("taxi", 50000, seed=13)
+    part = fit("kdtree", x, y, 32, seed=1)
+    idx = build_index(x, y, part)
+    return x, y, part, idx, SpatialEngine(idx)
+
+
+def test_mixed_workload_end_to_end(system):
+    x, y, part, idx, eng = system
+    rng = np.random.default_rng(5)
+    # point
+    ix = rng.integers(0, len(x), 32)
+    found = np.asarray(eng.point_query(x[ix], y[ix]))
+    assert found.all()
+    # range
+    rects = ds.random_rects(16, 1e-4, part.bounds, seed=17,
+                            centers=(x, y))
+    assert (np.asarray(eng.range_count(rects)) ==
+            range_oracle(x, y, rects)).all()
+    # kNN (paper default k=10)
+    d2, _ = eng.knn(x[ix[:8]], y[ix[:8]], 10)
+    want = knn_oracle(x, y, x[ix[:8]], y[ix[:8]], 10)
+    assert np.allclose(np.sort(np.asarray(d2), 1), want, rtol=1e-5)
+    # join
+    polys, ne = ds.random_polygons(6, part.bounds, seed=19)
+    got = np.asarray(eng.join_count(polys, ne))
+    want_j = np.array([pip_oracle(x, y, polys[i], ne[i]).sum()
+                       for i in range(6)])
+    assert (got == want_j).all()
+
+
+def test_learned_interval_much_smaller_than_partition(system):
+    """The spline bounds restrict the scan to a tiny interval — the
+    mechanism behind the paper's 2-3 orders-of-magnitude query claim."""
+    x, y, part, idx, eng = system
+    rects = ds.random_rects(32, 1e-5, part.bounds, seed=23,
+                            centers=(x, y))
+    klo, khi = K.rect_key_range(rects, idx.key_spec)
+    klo = K.keys_to_f32(klo)
+    khi = K.keys_to_f32(khi)
+    parts = eng.parts
+    widths = []
+    for p in range(idx.num_partitions):
+        part_p = {k: v[p] for k, v in parts.items()}
+        s, e = Q.learned_bounds(part_p, klo, khi,
+                                radix_bits=idx.radix_bits,
+                                probe=idx.probe)
+        widths.append(np.asarray(e - s))
+    # average learned interval across candidate partitions
+    w = np.mean(np.concatenate(widths))
+    assert w < 0.02 * idx.n_pad, (w, idx.n_pad)
+
+
+def test_build_scales_subquadratically(system):
+    """Index build is one sort + one linear pass; doubling N must not
+    quadruple build time (sanity check on the O(N log N + N) claim)."""
+    import jax
+    x, y = ds.make("uniform", 20000, seed=3)
+    part = fit("kdtree", x, y, 8, seed=1)
+    def best_of(n, f):
+        ts = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f())
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    jax.block_until_ready(build_index(x, y, part).key)  # warm caches
+    t1 = best_of(3, lambda: build_index(x, y, part).key)
+    x2, y2 = ds.make("uniform", 40000, seed=3)
+    part2 = fit("kdtree", x2, y2, 8, seed=1)
+    jax.block_until_ready(build_index(x2, y2, part2).key)
+    t2 = best_of(3, lambda: build_index(x2, y2, part2).key)
+    assert t2 < 6 * t1, (t1, t2)   # loose: 1-core CI noise
+
+
+def test_index_serializes_through_checkpoint(system, tmp_path):
+    """The learned index is a pytree: the checkpoint layer persists it
+    (serving restart path)."""
+    import dataclasses
+    import jax
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    x, y, part, idx, eng = system
+    arrays = {f.name: getattr(idx, f.name)
+              for f in dataclasses.fields(idx)
+              if f.name not in ("eps", "radix_bits", "probe", "key_spec")}
+    save_checkpoint(str(tmp_path), 1, arrays)
+    proto = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), arrays)
+    got = load_checkpoint(str(tmp_path), 1, proto)
+    assert (np.asarray(got["key"]) == np.asarray(idx.key)).all()
