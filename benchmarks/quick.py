@@ -1,0 +1,83 @@
+"""Quick smoke benchmark: every QuerySpec through the unified executor.
+
+Runs in seconds on tiny BENCH_N/BENCH_Q (set by ``run.py --quick``),
+timing each spec cold (compile + sticky settle) and steady (fused
+zero-sync path), and writes ``BENCH_quick.json`` — the perf-trajectory
+artifact a CI check diffs across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import BENCH_N, BENCH_Q, emit
+from repro.core import (CircleQuery, Executor, Knn, PointQuery,
+                        RangeCount, RangeQuery, SpatialJoin, build_index,
+                        fit)
+from repro.data import spatial as ds
+
+OUT = os.environ.get("BENCH_QUICK_OUT", "BENCH_quick.json")
+
+
+def main():
+    x, y = ds.make("taxi", BENCH_N, seed=0)
+    t0 = time.perf_counter()
+    part = fit("kdtree", x, y, min(16, BENCH_N // 256 or 1), seed=0)
+    index = build_index(x, y, part)
+    jax.block_until_ready(index.key)
+    build_ms = (time.perf_counter() - t0) * 1e3
+    ex = Executor(index)
+
+    rng = np.random.default_rng(1)
+    q = BENCH_Q
+    ix = rng.integers(0, BENCH_N, q)
+    qx, qy = x[ix], y[ix]
+    rects = ds.random_rects(q, 1e-4, part.bounds, seed=2, centers=(x, y))
+    polys, ne = ds.random_polygons(max(q // 8, 4), part.bounds, seed=3)
+    r = np.full(q, 0.02, np.float32)
+
+    workload = [
+        ("point", PointQuery(), (qx, qy), q),
+        ("range_count", RangeCount(), (rects,), q),
+        ("range", RangeQuery(), (rects,), q),
+        ("circle", CircleQuery(), (qx, qy, r), q),
+        ("circle_mat", CircleQuery(materialize=True), (qx, qy, r), q),
+        ("knn10", Knn(k=10), (qx, qy), q),
+        ("knn10_exact", Knn(k=10, mode="exact"), (qx, qy), q),
+        ("join", SpatialJoin(), (polys, ne), len(ne)),
+    ]
+
+    report = {"bench_n": BENCH_N, "bench_q": q, "build_ms": build_ms,
+              "specs": {}}
+    for name, spec, args, denom in workload:
+        t0 = time.perf_counter()
+        jax.block_until_ready(ex.run(spec, *args))
+        cold = (time.perf_counter() - t0) * 1e6 / denom
+        syncs0 = ex.host_syncs
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(ex.run(spec, *args))
+            best = min(best, time.perf_counter() - t0)
+        steady = best * 1e6 / denom
+        report["specs"][name] = {
+            "cold_us_per_q": round(cold, 2),
+            "steady_us_per_q": round(steady, 2),
+            "steady_host_syncs": ex.host_syncs - syncs0,
+        }
+        emit(f"quick/{name}/steady", steady)
+    report["executor"] = {k: v for k, v in ex.stats().items()
+                          if k != "sticky"}
+    report["executor"]["sticky"] = {
+        str(k): list(v) for k, v in ex.stats()["sticky"].items()}
+    with open(OUT, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"# wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,9 @@
 
 Four query types under default settings (selectivity 1e-5 skewed rects,
 k=10) against fullscan (~Spark), binsearch (sort-only), gridonly
-(~Sedona-N two-phase) — all on the same JAX substrate.
+(~Sedona-N two-phase) — all on the same JAX substrate, all driven by
+the SAME QuerySpec plan objects so the comparison is apples-to-apples
+at the API level too.
 """
 from __future__ import annotations
 
@@ -11,7 +13,8 @@ import numpy as np
 from benchmarks.common import (BENCH_N, BENCH_Q, BinSearchEngine,
                                FullScanEngine, GridOnlyEngine, emit,
                                timeit)
-from repro.core import SpatialEngine, build_index, fit
+from repro.core import (Executor, Knn, PointQuery, RangeCount,
+                        RangeQuery, SpatialJoin, build_index, fit)
 from repro.data import spatial as ds
 
 
@@ -19,7 +22,7 @@ def main():
     x, y = ds.make("taxi", BENCH_N, seed=0)
     part = fit("kdtree", x, y, 64, seed=0)
     index = build_index(x, y, part)
-    lilis = SpatialEngine(index)
+    lilis = Executor(index)
     grid = GridOnlyEngine(index)
     full = FullScanEngine(x, y)
     bins = BinSearchEngine(x, y, index.key_spec)
@@ -32,56 +35,61 @@ def main():
     polys, ne = ds.random_polygons(16, part.bounds, seed=3)
 
     q = BENCH_Q
-    emit("rq1/point/lilis", timeit(lambda: lilis.point_query(qx, qy)) / q)
-    emit("rq1/point/gridonly", timeit(lambda: grid.point_query(qx, qy))
+    point = PointQuery()
+    emit("rq1/point/lilis", timeit(lambda: lilis.run(point, qx, qy)) / q)
+    emit("rq1/point/gridonly", timeit(lambda: grid.run(point, qx, qy))
          / q)
-    emit("rq1/point/fullscan", timeit(lambda: full.point_query(qx, qy))
+    emit("rq1/point/fullscan", timeit(lambda: full.run(point, qx, qy))
          / q)
 
+    rq = RangeQuery()
+    rc = RangeCount()
     emit("rq1/range/lilis",
-         timeit(lambda: lilis.range_query(rects)[0]) / q)
+         timeit(lambda: lilis.run(rq, rects)[0]) / q)
     emit("rq1/range/gridonly",
-         timeit(lambda: grid.range_count(rects)) / q)
+         timeit(lambda: grid.run(rc, rects)) / q)
     emit("rq1/range/binsearch",
-         timeit(lambda: bins.range_count(rects)) / q)
+         timeit(lambda: bins.run(rc, rects)) / q)
     emit("rq1/range/fullscan",
-         timeit(lambda: full.range_count(rects)) / q)
+         timeit(lambda: full.run(rc, rects)) / q)
 
-    k = 10
+    knn = Knn(k=10)
     emit("rq1/knn/lilis",
-         timeit(lambda: lilis.knn(qx, qy, k, mode="pruned")[0]) / q)
+         timeit(lambda: lilis.run(knn, qx, qy)[0]) / q)
     emit("rq1/knn/gridonly",
-         timeit(lambda: grid.knn(qx, qy, k, mode="exact")[0]) / q)
-    emit("rq1/knn/fullscan", timeit(lambda: full.knn(qx, qy, k)[0]) / q)
+         timeit(lambda: grid.run(Knn(k=10, mode="exact"), qx, qy)[0])
+         / q)
+    emit("rq1/knn/fullscan", timeit(lambda: full.run(knn, qx, qy)[0]) / q)
 
+    join = SpatialJoin()
     emit("rq1/join/lilis",
-         timeit(lambda: lilis.join_count(polys, ne)) / 16)
+         timeit(lambda: lilis.run(join, polys, ne)) / 16)
     emit("rq1/join/fullscan",
-         timeit(lambda: full.join_count(polys, ne)) / 16)
+         timeit(lambda: full.run(join, polys, ne)) / 16)
 
     # scaling row: the learned-index gap grows with N (paper's regime is
     # billions of rows on a cluster; 1M on one core shows the trend)
     n2 = 1_000_000
     x2, y2 = ds.make("taxi", n2, seed=0)
     part2 = fit("kdtree", x2, y2, 256, seed=0)
-    eng2 = SpatialEngine(build_index(x2, y2, part2))
+    ex2 = Executor(build_index(x2, y2, part2))
     full2 = FullScanEngine(x2, y2)
     ix2 = rng.integers(0, n2, BENCH_Q)
     qx2, qy2 = x2[ix2], y2[ix2]
     rects2 = ds.random_rects(BENCH_Q, 1e-5, part2.bounds, seed=2,
                              centers=(x2, y2))
     emit("rq1/range@1M/lilis",
-         timeit(lambda: eng2.range_query(rects2)[0]) / q)
+         timeit(lambda: ex2.run(rq, rects2)[0]) / q)
     emit("rq1/range@1M/fullscan",
-         timeit(lambda: full2.range_count(rects2)) / q)
+         timeit(lambda: full2.run(rc, rects2)) / q)
     emit("rq1/knn@1M/lilis",
-         timeit(lambda: eng2.knn(qx2, qy2, 10)[0]) / q)
+         timeit(lambda: ex2.run(knn, qx2, qy2)[0]) / q)
     emit("rq1/knn@1M/fullscan",
-         timeit(lambda: full2.knn(qx2, qy2, 10)[0]) / q)
+         timeit(lambda: full2.run(knn, qx2, qy2)[0]) / q)
     emit("rq1/point@1M/lilis",
-         timeit(lambda: eng2.point_query(qx2, qy2)) / q)
+         timeit(lambda: ex2.run(point, qx2, qy2)) / q)
     emit("rq1/point@1M/fullscan",
-         timeit(lambda: full2.point_query(qx2, qy2)) / q)
+         timeit(lambda: full2.run(point, qx2, qy2)) / q)
 
 
 if __name__ == "__main__":

@@ -2,10 +2,15 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--only rq1,...]``
 Emits ``name,us_per_call,derived`` CSV lines.
+
+``PYTHONPATH=src python -m benchmarks.run --quick``
+Smoke mode: tiny BENCH_N/BENCH_Q, every QuerySpec through the unified
+executor, writes BENCH_quick.json (see tools/check.sh).
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -18,9 +23,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module prefixes")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode: tiny sizes, all QuerySpecs, "
+                         "emit BENCH_quick.json")
     args = ap.parse_args()
     picked = MODULES
-    if args.only:
+    if args.quick:
+        # must be set before benchmarks.common is imported
+        os.environ.setdefault("BENCH_N", "20000")
+        os.environ.setdefault("BENCH_Q", "16")
+        os.environ.setdefault("BENCH_REPEAT", "1")
+        picked = ["quick"]
+    elif args.only:
         pre = args.only.split(",")
         picked = [m for m in MODULES if any(m.startswith(p) for p in pre)]
     print("name,us_per_call,derived")

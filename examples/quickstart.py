@@ -1,10 +1,18 @@
-"""Quickstart: build a LiLIS learned spatial index and query it.
+"""Quickstart: build a LiLIS learned spatial index and query it through
+the declarative plan/executor API.
+
+A query is described by a frozen QuerySpec (WHAT to compute) and
+executed by the Executor (HOW: compilation, candidate-window tuning,
+distribution). Adding a query type means adding a spec + one local
+kernel — see src/repro/core/plan.py and DESIGN.md §9.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import SpatialEngine, build_index, fit
+from repro.core import (CircleQuery, Executor, Knn, PointQuery,
+                        RangeCount, RangeQuery, SpatialJoin, build_index,
+                        fit)
 from repro.data import spatial as ds
 
 
@@ -22,24 +30,39 @@ def main():
           f"model {sizes['local_model']/1e3:.0f} KB for "
           f"{len(x)*12/1e6:.0f} MB of points")
 
-    engine = SpatialEngine(index)
+    # 4. one executor serves every query type (pass mesh=... to shard)
+    ex = Executor(index)
 
     # point query (paper §4.1)
-    found = engine.point_query(x[:4], y[:4])
+    found = ex.run(PointQuery(), x[:4], y[:4])
     print("point query (known points):", np.asarray(found))
 
-    # range query (paper §4.2)
+    # range count + materializing range query (paper §4.2)
     rects = ds.random_rects(8, 1e-4, part.bounds, seed=1, centers=(x, y))
-    counts = engine.range_count(rects)
-    print("range counts:", np.asarray(counts))
+    print("range counts:", np.asarray(ex.run(RangeCount(), rects)))
+    cnt, vids, ok = ex.run(RangeQuery(), rects)
+    print("range ids[0][:5]:", np.asarray(vids)[0][:5])
+
+    # circle query with distance refine (paper Remark 2)
+    r = np.full(4, 0.02, np.float32)
+    print("circle counts:",
+          np.asarray(ex.run(CircleQuery(), x[:4], y[:4], r)))
 
     # kNN (paper §4.3)
-    d2, ids = engine.knn(x[:4], y[:4], k=5)
+    d2, ids = ex.run(Knn(k=5), x[:4], y[:4])
     print("knn ids[0]:", np.asarray(ids)[0])
 
     # spatial join (paper §4.4)
     polys, n_edges = ds.random_polygons(4, part.bounds, seed=2)
-    print("join counts:", np.asarray(engine.join_count(polys, n_edges)))
+    print("join counts:",
+          np.asarray(ex.run(SpatialJoin(), polys, n_edges)))
+
+    # mixed workloads dispatch through one entry point; once the
+    # adaptive window tiers are sticky, re-runs are zero-host-sync
+    batch = ex.run_batch([(RangeCount(), rects), (Knn(k=5), x[:4], y[:4])])
+    print("batched:", np.asarray(batch[0])[:4], "...,",
+          np.asarray(batch[1][1])[0][:3])
+    print("executor stats:", ex.stats())
 
 
 if __name__ == "__main__":

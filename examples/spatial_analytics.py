@@ -13,7 +13,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import SpatialEngine, build_index, fit
+from repro.core import Executor, Knn, SpatialJoin, build_index, fit
 from repro.data import spatial as ds
 
 
@@ -35,12 +35,12 @@ def main():
         n_dev = len(jax.devices())
         mesh = jax.make_mesh((n_dev,), ("data",))
         print(f"distributed over {n_dev} devices")
-    engine = SpatialEngine(index, mesh=mesh)
+    executor = Executor(index, mesh=mesh)
 
     zones, n_edges = ds.random_polygons(args.zones, part.bounds, seed=3,
                                         radius=0.05)
     t0 = time.perf_counter()
-    counts = np.asarray(engine.join_count(zones, n_edges))
+    counts = np.asarray(executor.run(SpatialJoin(), zones, n_edges))
     dt = time.perf_counter() - t0
     order = np.argsort(-counts)
     print(f"join of {args.zones} zones x {args.n} shops: {dt*1e3:.0f} ms")
@@ -51,8 +51,8 @@ def main():
     # follow-up: 10 nearest shops to each of the top zone centroids
     cent = np.stack([zones[order[:5], :, 0].mean(axis=1),
                      zones[order[:5], :, 1].mean(axis=1)], axis=1)
-    d2, ids = engine.knn(cent[:, 0].astype(np.float32),
-                         cent[:, 1].astype(np.float32), 10)
+    d2, ids = executor.run(Knn(k=10), cent[:, 0].astype(np.float32),
+                           cent[:, 1].astype(np.float32))
     print("nearest shops to densest zone:", np.asarray(ids)[0][:5])
 
 

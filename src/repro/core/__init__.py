@@ -6,11 +6,18 @@ Public API:
   Partitioner, fit             — spatial-aware partitioners (5 strategies)
   build_index                  — distributed index build pipeline
   LearnedSpatialIndex          — the index pytree
-  SpatialEngine                — distributed two-phase query engine
+  QuerySpec family             — declarative query plans (core/plan.py):
+    PointQuery, RangeCount, RangeQuery, CircleQuery, Knn, SpatialJoin
+  Executor                     — unified adaptive executor: run(spec, ...)
+  SpatialEngine                — method-per-query facade over Executor
 """
 from repro.core.keys import KeySpec, make_keys  # noqa: F401
 from repro.core.spline import build_spline, spline_predict  # noqa: F401
 from repro.core.radix import build_radix, radix_locate  # noqa: F401
 from repro.core.partitioner import Partitioner, fit, STRATEGIES  # noqa: F401
 from repro.core.build import LearnedSpatialIndex, build_index  # noqa: F401
-from repro.core.engine import SpatialEngine, EngineConfig  # noqa: F401
+from repro.core.plan import (  # noqa: F401
+    ALL_SPEC_TYPES, CircleQuery, EngineConfig, Knn, PointQuery,
+    QuerySpec, RangeCount, RangeQuery, SpatialJoin)
+from repro.core.executor import Executor  # noqa: F401
+from repro.core.engine import SpatialEngine  # noqa: F401

@@ -1,109 +1,40 @@
-"""Distributed two-phase spatial query engine (paper §3-4).
+"""SpatialEngine: backward-compatible facade over the plan/executor API.
 
-Phase 1 (global filter): the replicated partitioner boxes prune partitions
-per query. Phase 2 (local refine): the per-partition learned index narrows
-the scan to the predicted key interval, then coordinates refine exactly.
+The engine's method-per-query-type surface (point_query, range_count,
+range_query, circle_count, circle_query, knn, join_count) is kept for
+existing callers, but every method now delegates to ONE
+``core.executor.Executor`` dispatching declarative ``core.plan``
+QuerySpecs — compilation, the executable cache, and the adaptive
+sticky/escalation policy live there, once.
 
-Distribution: partition rows are sharded over a mesh axis via shard_map —
-each shard runs the identical local program on its partitions and results
-merge with one collective per query batch:
+New code should target the plan API directly:
 
-  point  -> psum (boolean OR as integer sum)
-  range  -> psum of counts / all_gather of windowed candidate ids
-  kNN    -> per-shard top-k, all_gather, merge top-k
-  join   -> psum of per-polygon counts
+    from repro.core import Executor, RangeQuery, Knn
+    ex = Executor(index, mesh=mesh)
+    counts, vids, ok = ex.run(RangeQuery(), rects)
+    d2, ids = ex.run(Knn(k=10), qx, qy)
 
-This mirrors Spark's mapPartitions + driver-side combine without touching
-the execution engine — the paper's C2 claim, realized as pure SPMD JAX.
+``Executor.run`` (strict=False) is the serving path: steady-state
+sticky hits execute a fused windowed+fallback program with zero
+host-side syncs. The facade methods use strict=True, preserving the
+pre-plan engine's host-checked escalation loop bit-for-bit (golden
+parity suite: tests/test_executor_parity.py). Architecture notes:
+DESIGN.md §9; query semantics: src/repro/core/plan.py.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core import keys as K
-from repro.core import queries as Q
 from repro.core.build import LearnedSpatialIndex
+from repro.core.executor import Executor
+from repro.core.plan import (CircleQuery, EngineConfig, Knn, PointQuery,
+                             RangeCount, RangeQuery, SpatialJoin)
 
-EMPTY_BOX = np.asarray([3e38, 3e38, -3e38, -3e38], np.float32)
-
-
-@dataclasses.dataclass(frozen=True)
-class EngineConfig:
-    part_chunk: int = 8          # partitions processed per lax.map step
-    range_cap: int = 64          # windowed-range candidate cap/partition
-    knn_cap: int = 64            # windowed kNN gather cap per partition
-    knn_max_rounds: int = 24     # radius doublings (covers any dataset)
-    join_cap: int = 128          # windowed join candidate cap/partition
-    range_cand: int = 8          # candidate partitions per range query
-    knn_cand: int = 8            # candidate partitions per kNN query
-    join_cand: int = 8           # candidate partitions per polygon
-
-
-def pad_partitions(index: LearnedSpatialIndex, multiple: int
-                   ) -> LearnedSpatialIndex:
-    """Pad the partition axis with empty partitions (never match queries)."""
-    p = index.num_partitions
-    p_pad = int(np.ceil(p / multiple) * multiple)
-    if p_pad == p:
-        return index
-    extra = p_pad - p
-
-    def pad(a, fill):
-        pad_block = jnp.full((extra,) + a.shape[1:], fill, a.dtype)
-        return jnp.concatenate([a, pad_block], axis=0)
-
-    return dataclasses.replace(
-        index,
-        key=pad(index.key, index.key_spec.sentinel),
-        x=pad(index.x, 3e38), y=pad(index.y, 3e38), vid=pad(index.vid, -1),
-        count=pad(index.count, 0),
-        knot_keys=pad(index.knot_keys, 3e38),
-        knot_pos=pad(index.knot_pos, 0.0),
-        n_knots=pad(index.n_knots, 0),
-        radix_table=pad(index.radix_table, 0),
-        radix_kmin=pad(index.radix_kmin, 0.0),
-        radix_scale=pad(index.radix_scale, 0.0),
-        part_bounds=jnp.concatenate(
-            [index.part_bounds,
-             jnp.broadcast_to(jnp.asarray(EMPTY_BOX), (extra, 4))], axis=0),
-    )
-
-
-def _part_arrays(index: LearnedSpatialIndex) -> dict:
-    """Shardable dict-of-arrays view (leading axis = partitions)."""
-    return {
-        "keys_f": K.keys_to_f32(index.key),
-        "x": index.x, "y": index.y, "vid": index.vid,
-        "count": index.count,
-        "knot_keys": index.knot_keys, "knot_pos": index.knot_pos,
-        "n_knots": index.n_knots, "radix_table": index.radix_table,
-        "radix_kmin": index.radix_kmin, "radix_scale": index.radix_scale,
-    }
-
-
-def _map_parts(f, parts, chunk: int, init=None):
-    """Sequential lax.map over partition chunks (bounds peak memory).
-
-    f(chunk_parts, carry) -> carry ; chunk_parts leaves (C, ...).
-    """
-    p = parts["count"].shape[0]
-    c = min(chunk, p)
-    assert p % c == 0, (p, c)
-    chunked = jax.tree_util.tree_map(
-        lambda a: a.reshape((p // c, c) + a.shape[1:]), parts)
-
-    def step(carry, ch):
-        return f(ch, carry), None
-
-    carry, _ = jax.lax.scan(step, init, chunked)
-    return carry
+# compat re-exports: these lived here pre-plan; the local SPMD programs
+# themselves moved to core/local_ops.py (import them from there)
+from repro.core.local_ops import EMPTY_BOX, pad_partitions  # noqa: F401
 
 
 class SpatialEngine:
@@ -111,86 +42,66 @@ class SpatialEngine:
 
     mesh=None -> single-device; otherwise partitions are sharded over
     ``part_axis`` (and query batches optionally over ``query_axis``).
+    Thin facade: see module docstring and core/executor.py.
     """
 
     def __init__(self, index: LearnedSpatialIndex, mesh: Optional[Mesh] = None,
                  part_axis: str = "data", query_axis: Optional[str] = None,
                  config: EngineConfig = EngineConfig()):
-        self.mesh = mesh
-        self.part_axis = part_axis
-        self.query_axis = query_axis
-        self.cfg = config
-        if mesh is not None:
-            shards = int(np.prod([mesh.shape[a] for a in _axes(part_axis)]))
-            index = pad_partitions(index, shards * config.part_chunk)
-        else:
-            index = pad_partitions(index, config.part_chunk)
-        self.index = index
-        self.parts = _part_arrays(index)
-        self.bounds = index.part_bounds          # (P, 4) replicated
-        self.spec = index.key_spec
-        b = index.key_spec.bounds
-        self.area = max((b[2] - b[0]) * (b[3] - b[1]), 1e-30)
-        self.n_total = int(jnp.sum(index.count))
-        self.density = max(self.n_total / self.area, 1e-30)
-        if mesh is not None:
-            pspec = P(_axes(part_axis))
-            self.parts = jax.device_put(
-                self.parts, NamedSharding(mesh, pspec))
-            self.bounds = jax.device_put(
-                self.bounds, NamedSharding(mesh, P()))
-        self._jits = {}
-        # self-tuning: remember the (cap, cand) that last succeeded per
-        # op so steady-state serving runs ONE execution, no retry chain
-        self._sticky = {}
+        self.executor = Executor(index, mesh=mesh, part_axis=part_axis,
+                                 query_axis=query_axis, config=config)
 
-    # -- helpers ---------------------------------------------------------
+    # executor state exposed for existing callers / introspection
+    @property
+    def index(self):
+        return self.executor.index
 
-    def _qkeys(self, qx, qy):
-        return K.keys_to_f32(K.make_keys(qx, qy, self.spec))
+    @property
+    def cfg(self):
+        return self.executor.cfg
 
-    def _rect_keys(self, rects):
-        klo, khi = K.rect_key_range(rects, self.spec)
-        return K.keys_to_f32(klo), K.keys_to_f32(khi)
+    @property
+    def mesh(self):
+        return self.executor.mesh
 
-    def _shard(self, fn_name, fn):
-        """jit (and shard_map when meshed) a local-engine function."""
-        if fn_name in self._jits:
-            return self._jits[fn_name]
-        if self.mesh is None:
-            out = jax.jit(partial(fn, axis=None))
-        else:
-            axes = _axes(self.part_axis)
-            in_specs = (P(axes),) + (P(),) * (fn.n_query_args + 1)
-            out_specs = P()
-            kw = dict(mesh=self.mesh, in_specs=in_specs,
-                      out_specs=out_specs)
-            try:
-                wrapped = jax.shard_map(partial(fn, axis=axes),
-                                        check_vma=False, **kw)
-            except TypeError:  # older jax spelling
-                wrapped = jax.shard_map(partial(fn, axis=axes),
-                                        check_rep=False, **kw)
-            out = jax.jit(wrapped)
-        self._jits[fn_name] = out
-        return out
+    @property
+    def parts(self):
+        return self.executor.parts
 
-    # -- point query (paper §4.1) ----------------------------------------
+    @property
+    def bounds(self):
+        return self.executor.bounds
+
+    @property
+    def spec(self):
+        return self.executor.spec
+
+    @property
+    def density(self):
+        return self.executor.density
+
+    @property
+    def n_total(self):
+        return self.executor.n_total
+
+    # -- plan API passthrough (the extension point) ----------------------
+
+    def run(self, spec, *args, strict: bool = False):
+        """Dispatch a QuerySpec (see core/plan.py) through the executor."""
+        return self.executor.run(spec, *args, strict=strict)
+
+    def run_batch(self, requests, strict: bool = False):
+        return self.executor.run_batch(requests, strict=strict)
+
+    # -- facade methods (pre-plan signatures, strict semantics) ----------
 
     def point_query(self, qx, qy):
-        qx = jnp.asarray(qx, jnp.float32)
-        qy = jnp.asarray(qy, jnp.float32)
-        qk = self._qkeys(qx, qy)
-        fn = self._shard("point", _PointLocal(self.index, self.cfg))
-        return fn(self.parts, self.bounds, qx, qy, qk) > 0
-
-    # -- range query (paper §4.2) ----------------------------------------
+        """Exact membership (paper §4.1): found (Q,) bool."""
+        return self.executor.run(PointQuery(), qx, qy)
 
     def range_count(self, rects):
-        rects = jnp.asarray(rects, jnp.float32)
-        klo, khi = self._rect_keys(rects)
-        fn = self._shard("range_count", _RangeCountLocal(self.index, self.cfg))
-        return fn(self.parts, self.bounds, rects, klo, khi)
+        """Exact in-rect counts (paper §4.2): (Q,) int32."""
+        return self.executor.run(RangeCount(), rects)
 
     def range_query(self, rects, cap: Optional[int] = None):
         """Windowed materializing range query.
@@ -198,512 +109,28 @@ class SpatialEngine:
         Returns (counts, vids (Q, ncap) padded -1, ok). Falls back to a
         doubled cap on host when any window overflowed (exactness kept).
         """
-        rects = jnp.asarray(rects, jnp.float32)
-        klo, khi = self._rect_keys(rects)
-        cap0, cand0 = self._sticky.get(
-            "range", (self.cfg.range_cap, self.cfg.range_cand))
-        cap = cap or cap0
-        cand = cand0
-        while True:
-            fn = self._shard(f"range_q{cap}x{cand}",
-                             _RangeWindowLocal(self.index, self.cfg, cap,
-                                               cand))
-            counts, vids, ok = fn(self.parts, self.bounds, rects, klo,
-                                  khi)
-            if bool(jnp.all(ok)) or (cap >= self.index.n_pad and
-                                     cand >= self.index.num_partitions):
-                self._sticky["range"] = (cap, cand)
-                return counts, vids, ok
-            cap = min(cap * 4, self.index.n_pad)
-            cand = min(cand * 2, self.index.num_partitions)
+        return self.executor.run(RangeQuery(cap=cap), rects, strict=True)
 
     def circle_count(self, cx, cy, r):
         """Circle range query via MBR + distance refine (paper Remark 2)."""
-        rects = jnp.stack([cx - r, cy - r, cx + r, cy + r], axis=-1)
-        klo, khi = self._rect_keys(rects)
-        fn = self._shard("circle_count",
-                         _CircleCountLocal(self.index, self.cfg))
-        return fn(self.parts, self.bounds, rects, klo, khi,
-                  jnp.stack([cx, cy, r], axis=-1))
+        return self.executor.run(CircleQuery(), cx, cy, r, strict=True)
 
-    # -- kNN (paper §4.3) --------------------------------------------------
+    def circle_query(self, cx, cy, r):
+        """Materializing circle query: (counts, vids padded -1, ok)."""
+        return self.executor.run(CircleQuery(materialize=True),
+                                 cx, cy, r, strict=True)
 
     def knn(self, qx, qy, k: int, mode: str = "pruned"):
         """Exact k nearest neighbours: (dist2 (Q,k), vid (Q,k))."""
-        qx = jnp.asarray(qx, jnp.float32)
-        qy = jnp.asarray(qy, jnp.float32)
-        if mode == "exact":
-            return self._knn_exact(qx, qy, k)
-        cap0 = self._sticky.get(f"knn{k}", self.cfg.knn_cap)
-        cap = cap0
-        while True:
-            d2, vid, ok = self._knn_pruned(qx, qy, k, cap)
-            if bool(jnp.all(ok)):
-                self._sticky[f"knn{k}"] = cap
-                return d2, vid
-            if cap >= self.index.n_pad:
-                break
-            cap = min(cap * 4, self.index.n_pad)
-        # final fallback for unresolved queries: exact scan
-        d2e, vide = self._knn_exact(qx, qy, k)
-        okc = ok[:, None]
-        return jnp.where(okc, d2, d2e), jnp.where(okc, vid, vide)
-
-    def _knn_exact(self, qx, qy, k):
-        fn = self._shard(f"knn_exact{k}",
-                         _KnnExactLocal(self.index, self.cfg, k))
-        neg, vid = fn(self.parts, self.bounds, qx, qy)
-        return -neg, vid
-
-    def _knn_pruned(self, qx, qy, k, cap=None):
-        # Paper Eq. (1): r = sqrt(k / (pi * d)) — refined with the LOCAL
-        # density of each query's nearest partition (beyond-paper: the
-        # global-density estimate needs many expansion rounds in sparse
-        # regions; the per-partition counts are free in the global index)
-        r0g = float(np.sqrt(max(k, 1) / (np.pi * self.density)))
-        bd2 = Q.box_min_dist2(qx, qy, self.bounds)
-        pid0 = jnp.argmin(bd2, axis=1)
-        b0 = self.bounds[pid0]
-        area0 = jnp.maximum((b0[:, 2] - b0[:, 0]) *
-                            (b0[:, 3] - b0[:, 1]), 1e-30)
-        d0 = jnp.maximum(self.index.count[pid0] / area0, 1e-30)
-        r0 = jnp.sqrt(k / (jnp.pi * d0)).astype(jnp.float32)
-        r0 = jnp.maximum(r0, r0g)
-        cap = cap or self.cfg.knn_cap
-        fn = self._shard(
-            f"knn_pruned{k}x{self.cfg.knn_cand}c{cap}",
-            _KnnPrunedLocal(self.index, self.cfg, k, self.spec,
-                            self.cfg.knn_cand, cap))
-        neg, vid, ok = fn(self.parts, self.bounds, qx, qy, r0)
-        return -neg, vid, ok
-
-    # -- spatial join (paper §4.4) -----------------------------------------
+        return self.executor.run(Knn(k=k, mode=mode), qx, qy,
+                                 strict=True)
 
     def join_count(self, polys, n_edges, mode: str = "windowed"):
         """counts (PG,) of points contained in each polygon.
 
         polys: (PG, E, 2) padded vertex lists; n_edges: (PG,) int32.
         Polygons are broadcast (replicated) — the paper's |PG| << |D|
-        case. The windowed path scans only the learned MBR interval and
-        falls back per-polygon to the exact full refine on window
-        overflow.
+        case.
         """
-        polys = jnp.asarray(polys, jnp.float32)
-        n_edges = jnp.asarray(n_edges, jnp.int32)
-        mbrs = jnp.concatenate([
-            jnp.min(jnp.where(_edge_mask(polys, n_edges), polys, 3e38),
-                    axis=1),
-            jnp.max(jnp.where(_edge_mask(polys, n_edges), polys, -3e38),
-                    axis=1)], axis=-1)
-        klo, khi = self._rect_keys(mbrs)
-        mbr_k = jnp.concatenate([mbrs, klo[:, None], khi[:, None]],
-                                axis=-1)
-        if mode == "windowed":
-            cap, cand = self._sticky.get(
-                "join", (self.cfg.join_cap, self.cfg.join_cand))
-            while True:
-                fn = self._shard(
-                    f"join_w{cap}x{cand}",
-                    _JoinLocal(self.index, self.cfg, cap, cand))
-                cnt, ok = fn(self.parts, self.bounds, polys, n_edges,
-                             mbr_k)
-                if bool(jnp.all(ok)):
-                    self._sticky["join"] = (cap, cand)
-                    return cnt
-                if cap >= self.index.n_pad and \
-                        cand >= self.index.num_partitions:
-                    break
-                cap = min(cap * 4, self.index.n_pad)
-                cand = min(cand * 2, self.index.num_partitions)
-        fn = self._shard("join_full", _JoinFullLocal(self.index,
-                                                     self.cfg))
-        return fn(self.parts, self.bounds, polys, n_edges, mbr_k)
-
-
-def _edge_mask(polys, n_edges):
-    e = polys.shape[1]
-    return (jnp.arange(e)[None, :, None] < n_edges[:, None, None])
-
-
-def _axes(axis):
-    return axis if isinstance(axis, tuple) else (axis,)
-
-
-def _psum(x, axis):
-    return x if axis is None else jax.lax.psum(x, axis)
-
-
-def _top_candidates(flags, c: int):
-    """First C true columns per row of (Q, P) flags.
-
-    Returns (pids (Q, C) int32, valid (Q, C), within (Q,) — True when the
-    row had <= C candidates, i.e. the result is complete)."""
-    qn, p = flags.shape
-    c = min(c, p)
-    order = jnp.argsort(~flags, axis=1, stable=True)[:, :c]
-    valid = jnp.take_along_axis(flags, order, axis=1)
-    within = jnp.sum(flags.astype(jnp.int32), axis=1) <= c
-    return order.astype(jnp.int32), valid, within
-
-
-# ---------------------------------------------------------------------------
-# Local (per-shard) programs. Each is a callable with attribute n_query_args
-# so the engine knows its signature: fn(parts, bounds, *queries, axis=...).
-# `bounds` is the REPLICATED global index; `parts` leaves are LOCAL shards.
-# ---------------------------------------------------------------------------
-
-class _LocalFn:
-    def __init__(self, index: LearnedSpatialIndex, cfg: EngineConfig):
-        self.kw = dict(radix_bits=index.radix_bits, probe=index.probe)
-        self.cfg = cfg
-        self.p_total = index.num_partitions
-        self.n_pad = index.n_pad
-        self.spec = index.key_spec
-
-    def _local_offset(self, axis, p_loc):
-        if axis is None:
-            return jnp.int32(0)
-        idx = jnp.int32(0)
-        mul = jnp.int32(1)
-        for a in reversed(axis):
-            idx = idx + jax.lax.axis_index(a) * mul
-            mul = mul * jax.lax.axis_size(a)
-        return idx * p_loc
-
-
-class _PointLocal(_LocalFn):
-    n_query_args = 3
-
-    def __call__(self, parts, bounds, qx, qy, qk, *, axis):
-        p_loc = parts["count"].shape[0]
-        off = self._local_offset(axis, p_loc)
-        # global filter: first-match grid (paper Alg. 1 semantics) and the
-        # overflow grid are the only partitions that can contain the point.
-        inb = Q.point_in_box(qx, qy, bounds[:-1])        # (Q, G)
-        hit = jnp.any(inb, axis=1)
-        pid1 = jnp.where(hit, jnp.argmax(inb, axis=1).astype(jnp.int32),
-                         self.p_total - 1)
-        pid2 = jnp.full_like(pid1, self.p_total - 1)      # overflow grid
-
-        def probe_pid(pid):
-            lid = pid - off
-            mine = (lid >= 0) & (lid < p_loc)
-            lid = jnp.clip(lid, 0, p_loc - 1)
-
-            def one(l, m, kq, ax, ay):
-                part = jax.tree_util.tree_map(lambda a: a[l], parts)
-                f, _ = Q.point_query_partition(
-                    part, kq[None], ax[None], ay[None], **self.kw)
-                return f[0] & m
-
-            return jax.vmap(one)(lid, mine, qk, qx, qy)
-
-        found = probe_pid(pid1) | probe_pid(pid2)
-        return _psum(found.astype(jnp.int32), axis)
-
-
-class _RangeCountLocal(_LocalFn):
-    n_query_args = 3
-
-    def __call__(self, parts, bounds, rects, klo, khi, *, axis):
-        p_loc = parts["count"].shape[0]
-        off = self._local_offset(axis, p_loc)
-        overlap = Q.rect_overlaps_box(rects, bounds)      # (Q, P_total)
-
-        def chunk_fn(ch, carry):
-            c = ch["count"].shape[0]
-            base = carry["i"] * c + off
-
-            def one(j, part):
-                act = jax.lax.dynamic_index_in_dim(
-                    overlap, base + j, axis=1, keepdims=False)
-                cnt, _ = Q.range_count_partition(
-                    part, rects, klo, khi, active=act, **self.kw)
-                return cnt
-
-            cnts = jax.vmap(one)(jnp.arange(c), ch)       # (C, Q)
-            return {"i": carry["i"] + 1,
-                    "acc": carry["acc"] + jnp.sum(cnts, axis=0)}
-
-        out = _map_parts(chunk_fn, parts, self.cfg.part_chunk,
-                         init={"i": jnp.int32(0),
-                               "acc": jnp.zeros(rects.shape[0], jnp.int32)})
-        return _psum(out["acc"], axis)
-
-
-class _CircleCountLocal(_LocalFn):
-    n_query_args = 4
-
-    def __call__(self, parts, bounds, rects, klo, khi, circ, *, axis):
-        p_loc = parts["count"].shape[0]
-        off = self._local_offset(axis, p_loc)
-        overlap = Q.rect_overlaps_box(rects, bounds)
-
-        def chunk_fn(ch, carry):
-            c = ch["count"].shape[0]
-            base = carry["i"] * c + off
-
-            def one(j, part):
-                act = jax.lax.dynamic_index_in_dim(
-                    overlap, base + j, axis=1, keepdims=False)
-                _, m = Q.range_count_partition(
-                    part, rects, klo, khi, active=act, **self.kw)
-                dx = part["x"][None, :] - circ[:, 0:1]
-                dy = part["y"][None, :] - circ[:, 1:2]
-                inc = (dx * dx + dy * dy) <= circ[:, 2:3] ** 2
-                return jnp.sum((m & inc).astype(jnp.int32), axis=1)
-
-            cnts = jax.vmap(one)(jnp.arange(c), ch)
-            return {"i": carry["i"] + 1,
-                    "acc": carry["acc"] + jnp.sum(cnts, axis=0)}
-
-        out = _map_parts(chunk_fn, parts, self.cfg.part_chunk,
-                         init={"i": jnp.int32(0),
-                               "acc": jnp.zeros(rects.shape[0], jnp.int32)})
-        return _psum(out["acc"], axis)
-
-
-class _RangeWindowLocal(_LocalFn):
-    """Query-centric windowed range query (the paper's two-phase shape):
-    phase 1 selects the <=C candidate partitions per query from the
-    replicated global index; phase 2 gathers ONLY each candidate's
-    learned key interval (cap slots). Work ~ Q x C x cap, independent of
-    the total partition count and of partition size."""
-
-    n_query_args = 3
-
-    def __init__(self, index, cfg, cap, cand):
-        super().__init__(index, cfg)
-        self.cap = min(cap, index.n_pad)
-        self.cand = cand
-
-    def __call__(self, parts, bounds, rects, klo, khi, *, axis):
-        del klo, khi   # recomputed per-candidate with clipping
-        p_loc = parts["count"].shape[0]
-        off = self._local_offset(axis, p_loc)
-        qn = rects.shape[0]
-        overlap = Q.rect_overlaps_box(rects, bounds)       # (Q, P_total)
-        pids, valid, within = _top_candidates(overlap, self.cand)
-        boxes = bounds[pids.reshape(-1)].reshape(qn, self.cand, 4)
-        local = pids - off
-        mine = valid & (local >= 0) & (local < p_loc)
-        local = jnp.clip(local, 0, p_loc - 1)
-        cnts, vids, ok, _, _ = Q.range_window_at(
-            parts, boxes, local, mine, rects, self.spec, cap=self.cap,
-            **self.kw)
-        cnt = _psum(jnp.sum(cnts, axis=1), axis)
-        vids = vids.reshape(qn, -1)
-        okq = jnp.all(ok | ~mine, axis=1)
-        if axis is not None:
-            vids = jax.lax.all_gather(vids, axis, axis=1, tiled=True)
-            shards = jax.lax.psum(1, axis)
-            okq = jax.lax.psum(okq.astype(jnp.int32), axis) == shards
-        order = jnp.argsort(-(vids >= 0).astype(jnp.int32), axis=1,
-                            stable=True)
-        keep = min(vids.shape[1], max(self.cap * 8, 256))
-        vids = jnp.take_along_axis(vids, order[:, :keep], axis=1)
-        cap_ok = jnp.sum((vids >= 0).astype(jnp.int32), axis=1) == cnt
-        return cnt, vids, okq & within & cap_ok
-
-
-class _KnnExactLocal(_LocalFn):
-    n_query_args = 2
-
-    def __init__(self, index, cfg, k):
-        super().__init__(index, cfg)
-        self.k = k
-
-    def __call__(self, parts, bounds, qx, qy, *, axis):
-        qn = qx.shape[0]
-        k = self.k
-
-        def chunk_fn(ch, carry):
-            def one(part):
-                dx = part["x"][None, :] - qx[:, None]
-                dy = part["y"][None, :] - qy[:, None]
-                valid = jnp.arange(self.n_pad)[None, :] < part["count"]
-                d2 = jnp.where(valid, dx * dx + dy * dy, 3e38)
-                return -d2, jnp.broadcast_to(part["vid"][None, :],
-                                             d2.shape)
-
-            neg, vid = jax.vmap(one)(ch)                   # (C, Q, n_pad)
-            neg = jnp.swapaxes(neg, 0, 1).reshape(qn, -1)
-            vid = jnp.swapaxes(vid, 0, 1).reshape(qn, -1)
-            cand_n = jnp.concatenate([carry[0], neg], axis=1)
-            cand_v = jnp.concatenate([carry[1], vid], axis=1)
-            best_n, ix = jax.lax.top_k(cand_n, k)
-            best_v = jnp.take_along_axis(cand_v, ix, axis=1)
-            return best_n, best_v
-
-        init = (jnp.full((qn, k), -3e38, jnp.float32),
-                jnp.full((qn, k), -1, jnp.int32))
-        neg, vid = _map_parts(chunk_fn, parts, self.cfg.part_chunk, init)
-        if axis is not None:
-            neg = jax.lax.all_gather(neg, axis, axis=1, tiled=True)
-            vid = jax.lax.all_gather(vid, axis, axis=1, tiled=True)
-            best_n, ix = jax.lax.top_k(neg, k)
-            vid = jnp.take_along_axis(vid, ix, axis=1)
-            neg = best_n
-        return neg, vid
-
-
-class _KnnPrunedLocal(_LocalFn):
-    """Paper §4.3, query-centric: density-estimated radius, windowed
-    range gather over the <=C nearest candidate partitions, geometric
-    expansion until >=k verified in-circle candidates. Exact when ok;
-    the engine falls back to the full scan per unresolved query."""
-
-    n_query_args = 3
-
-    def __init__(self, index, cfg, k, spec, cand, cap):
-        super().__init__(index, cfg)
-        self.k = k
-        self.spec2 = spec
-        self.cand = cand
-        self.cap = min(cap, index.n_pad)
-
-    def __call__(self, parts, bounds, qx, qy, r0, *, axis):
-        qn = qx.shape[0]
-        k = self.k
-        cap = self.cap
-        cand = self.cand
-        p_loc = parts["count"].shape[0]
-        off = self._local_offset(axis, p_loc)
-        boxd2 = Q.box_min_dist2(qx, qy, bounds)            # (Q, P_total)
-        # C nearest partitions by box distance (static per query batch)
-        order = jnp.argsort(boxd2, axis=1)[:, :cand].astype(jnp.int32)
-        cand_d2 = jnp.take_along_axis(boxd2, order, axis=1)
-        boxes = bounds[order.reshape(-1)].reshape(qn, cand, 4)
-        local = order - off
-        inshard = (local >= 0) & (local < p_loc)
-        local = jnp.clip(local, 0, p_loc - 1)
-
-        def gather_round(r):
-            rects = jnp.stack([qx - r, qy - r, qx + r, qy + r], axis=-1)
-            active = inshard & (cand_d2 <= (r * r)[:, None])
-            # coverage: every partition within r must be a candidate
-            covered = jnp.sum((boxd2 <= (r * r)[:, None]).astype(
-                jnp.int32), axis=1) <= cand
-            cnts, vids, ok, wx, wy = Q.range_window_at(
-                parts, boxes, local, active, rects, self.spec2,
-                cap=cap, **self.kw)
-            d2 = ((wx - qx[:, None, None]) ** 2 +
-                  (wy - qy[:, None, None]) ** 2)
-            inc = (vids >= 0) & (d2 <= (r * r)[:, None, None])
-            negd = jnp.where(inc, -d2, -3e38).reshape(qn, -1)
-            wv = jnp.where(inc, vids, -1).reshape(qn, -1)
-            bn, ix = jax.lax.top_k(negd, k)
-            bv = jnp.take_along_axis(wv, ix, axis=1)
-            cnt = jnp.sum(inc.astype(jnp.int32), axis=(1, 2))
-            okq = jnp.all(ok | ~active, axis=1) & covered
-            if axis is not None:
-                bn_g = jax.lax.all_gather(bn, axis, axis=1, tiled=True)
-                bv_g = jax.lax.all_gather(bv, axis, axis=1, tiled=True)
-                bn, ix = jax.lax.top_k(bn_g, k)
-                bv = jnp.take_along_axis(bv_g, ix, axis=1)
-                cnt = jax.lax.psum(cnt, axis)
-                okq = jax.lax.psum(okq.astype(jnp.int32), axis) == \
-                    jax.lax.psum(1, axis)
-            return bn, bv, okq, cnt
-
-        def cond(state):
-            rounds, r, done, *_ = state
-            return (rounds < self.cfg.knn_max_rounds) & ~jnp.all(done)
-
-        def body(state):
-            rounds, r, done, bn, bv, okc = state
-            bn2, bv2, ok2, cnt2 = gather_round(r)
-            newly = (cnt2 >= k) & ok2 & ~done
-            bn = jnp.where(newly[:, None], bn2, bn)
-            bv = jnp.where(newly[:, None], bv2, bv)
-            okc = okc | newly
-            done2 = done | newly | ~ok2        # overflow -> fallback
-            r2 = jnp.where(done2, r, r * 2.0)
-            return rounds + 1, r2, done2, bn, bv, okc
-
-        state = (jnp.int32(0), r0, jnp.zeros(qn, bool),
-                 jnp.full((qn, k), -3e38, jnp.float32),
-                 jnp.full((qn, k), -1, jnp.int32), jnp.zeros(qn, bool))
-        _, _, done, bn, bv, okc = jax.lax.while_loop(cond, body, state)
-        return bn, bv, okc & done
-
-
-class _JoinLocal(_LocalFn):
-    """Query-centric windowed broadcast join: per polygon, gather only
-    the learned MBR interval of its <=C candidate partitions, refine by
-    ray casting on those <= C*cap points."""
-
-    n_query_args = 3
-
-    def __init__(self, index, cfg, cap, cand):
-        super().__init__(index, cfg)
-        self.cap = min(cap, index.n_pad)
-        self.cand = cand
-
-    def __call__(self, parts, bounds, polys, n_edges, mbr_k, *, axis):
-        pg = polys.shape[0]
-        p_loc = parts["count"].shape[0]
-        off = self._local_offset(axis, p_loc)
-        mbrs = mbr_k[:, :4]
-        overlap = Q.rect_overlaps_box(mbrs, bounds)
-        pids, valid, within = _top_candidates(overlap, self.cand)
-        boxes = bounds[pids.reshape(-1)].reshape(pg, self.cand, 4)
-        local = pids - off
-        mine = valid & (local >= 0) & (local < p_loc)
-        local = jnp.clip(local, 0, p_loc - 1)
-        cnts, vids, ok, wx, wy = Q.range_window_at(
-            parts, boxes, local, mine, mbrs, self.spec, cap=self.cap,
-            z_depth=3, **self.kw)
-
-        def pip(poly, ne, wxq, wyq, vq):
-            inside = Q.point_in_polygon(wxq.reshape(-1),
-                                        wyq.reshape(-1), poly, ne)
-            return jnp.sum(((vq.reshape(-1) >= 0) & inside
-                            ).astype(jnp.int32))
-
-        cnt = jax.vmap(pip)(polys, n_edges, wx, wy, vids)
-        cnt = _psum(cnt, axis)
-        okq = jnp.all(ok | ~mine, axis=1)
-        if axis is not None:
-            shards = jax.lax.psum(1, axis)
-            okq = jax.lax.psum(okq.astype(jnp.int32), axis) == shards
-        return cnt, okq & within
-
-
-class _JoinFullLocal(_LocalFn):
-    """Exact full-refine join (fallback / gridonly baseline)."""
-
-    n_query_args = 3
-
-    def __call__(self, parts, bounds, polys, n_edges, mbr_k, *, axis):
-        pg = polys.shape[0]
-        p_loc = parts["count"].shape[0]
-        off = self._local_offset(axis, p_loc)
-        mbrs, klo, khi = mbr_k[:, :4], mbr_k[:, 4], mbr_k[:, 5]
-        overlap = Q.rect_overlaps_box(mbrs, bounds)
-
-        def chunk_fn(ch, carry):
-            c = ch["count"].shape[0]
-            base = carry["i"] * c + off
-
-            def one(j, part):
-                act = jax.lax.dynamic_index_in_dim(
-                    overlap, base + j, axis=1, keepdims=False)
-                _, m = Q.range_count_partition(
-                    part, mbrs, klo, khi, active=act, **self.kw)  # (PG, n)
-
-                def pip(poly, ne, mask):
-                    inside = Q.point_in_polygon(part["x"], part["y"],
-                                                poly, ne)
-                    return jnp.sum((mask & inside).astype(jnp.int32))
-
-                return jax.vmap(pip)(polys, n_edges, m)
-
-            cnts = jax.vmap(one)(jnp.arange(c), ch)       # (C, PG)
-            return {"i": carry["i"] + 1,
-                    "acc": carry["acc"] + jnp.sum(cnts, axis=0)}
-
-        out = _map_parts(chunk_fn, parts, self.cfg.part_chunk,
-                         init={"i": jnp.int32(0),
-                               "acc": jnp.zeros(pg, jnp.int32)})
-        return _psum(out["acc"], axis)
+        return self.executor.run(SpatialJoin(mode=mode), polys, n_edges,
+                                 strict=True)

@@ -1,0 +1,511 @@
+"""Unified adaptive query executor (DESIGN.md §9).
+
+ONE place owns what the six SpatialEngine methods used to hand-roll
+separately:
+
+  (a) compilation — jit + shard_map wrapping of the local SPMD programs
+      (core/local_ops.py), with an executable cache that EVICTS a
+      spec's superseded cap-variants (keeps the sticky tier + the
+      initial-config tier) so escalation cannot leak compiled programs
+      in long-running serving;
+  (b) the adaptive-cap policy — sticky last-successful (cap, cand) per
+      ``spec.sticky_key()``, geometric escalation schedule, and an
+      exactness-preserving final fallback;
+  (c) dispatch — ``run(spec, *args)`` / ``run_batch([...])`` so mixed
+      workloads enter through one door.
+
+Two execution modes for adaptive specs:
+
+  strict=True   the backward-compatible facade mode: host-checked
+                escalation loop, identical control flow (and bitwise
+                results) to the pre-plan engine. One host sync per
+                attempt.
+  strict=False  the serving mode: once a sticky (cap, cand) exists the
+                compiled program FUSES the windowed attempt with a
+                lax.cond exact fallback, so a steady-state ``run`` with
+                a sticky hit performs ZERO host-side bool(jnp.all(...))
+                syncs while counts stay exact. The ``ok`` flags of
+                materializing specs still report window completeness.
+
+Every host synchronization goes through ``_all_ok`` and is counted in
+``host_syncs`` — asserted by the dispatch-count test.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import keys as K
+from repro.core import queries as Q
+from repro.core.build import LearnedSpatialIndex
+from repro.core.plan import (CircleQuery, EngineConfig, Knn, PointQuery,
+                             QuerySpec, RangeCount, RangeQuery,
+                             SpatialJoin)
+from repro.core import local_ops as L
+from repro.core.local_ops import _axes
+
+
+def shard_map_fn():
+    """Resolve shard_map across jax versions (jax.shard_map is new)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    return sm
+
+
+def _shard_map_wrap(fn, mesh, in_specs, out_specs):
+    """shard_map with the replication-check kwarg spelling per version."""
+    sm = shard_map_fn()
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    try:
+        return sm(fn, check_vma=False, **kw)
+    except (TypeError, AttributeError):  # older jax spelling
+        return sm(fn, check_rep=False, **kw)
+
+
+@dataclasses.dataclass
+class _AdaptiveOp:
+    """Descriptor binding one query family to the shared policy loop."""
+    base: Tuple                       # sticky/cache key
+    initial: Tuple[int, int]          # starting (cap, cand)
+    window: Callable                  # (cap, cand) -> local program
+    get_ok: Callable                  # raw result -> ok array
+    finalize: Callable                # raw result -> public result
+    escalate: Callable                # (cap, cand) -> (cap, cand)
+    maxed: Callable                   # (cap, cand) -> bool
+    sticky_on_maxed: bool             # seed semantics differ per op
+    fallback: Optional[Callable]      # (pargs, raw) -> exact result
+    fused: Optional[Callable]         # (cap, cand) -> fused local program
+    post: Callable = lambda r: r      # fused/public result adapter
+
+
+class Executor:
+    """Compiles and runs QuerySpecs against one LearnedSpatialIndex.
+
+    mesh=None -> single-device; otherwise partitions are sharded over
+    ``part_axis`` (and query batches optionally over ``query_axis``).
+    """
+
+    def __init__(self, index: LearnedSpatialIndex,
+                 mesh: Optional[Mesh] = None, part_axis: str = "data",
+                 query_axis: Optional[str] = None,
+                 config: EngineConfig = EngineConfig()):
+        self.mesh = mesh
+        self.part_axis = part_axis
+        self.query_axis = query_axis
+        self.cfg = config
+        if mesh is not None:
+            shards = int(np.prod([mesh.shape[a] for a in _axes(part_axis)]))
+            index = L.pad_partitions(index, shards * config.part_chunk)
+        else:
+            index = L.pad_partitions(index, config.part_chunk)
+        self.index = index
+        self.parts = L.part_arrays(index)
+        self.bounds = index.part_bounds          # (P, 4) replicated
+        self.spec = index.key_spec
+        b = index.key_spec.bounds
+        self.area = max((b[2] - b[0]) * (b[3] - b[1]), 1e-30)
+        self.n_total = int(jnp.sum(index.count))
+        self.density = max(self.n_total / self.area, 1e-30)
+        if mesh is not None:
+            pspec = P(_axes(part_axis))
+            self.parts = jax.device_put(
+                self.parts, NamedSharding(mesh, pspec))
+            self.bounds = jax.device_put(
+                self.bounds, NamedSharding(mesh, P()))
+        self._cache = {}      # exec_key -> compiled callable
+        self._sticky = {}     # sticky_key -> last-successful (cap, cand)
+        self._initial = {}    # sticky_key -> initial-config (cap, cand)
+        self._pending = {}    # sticky_key -> (tier, ok device array)
+        self._escalators = {}  # sticky_key -> the op's escalate rule
+        self.host_syncs = 0   # counted bool(jnp.all(...)) blocking reads
+        self.dispatches = 0   # compiled-program launches
+
+    # -- compilation + executable cache ----------------------------------
+
+    def _compile(self, exec_key, make_fn):
+        """jit (and shard_map when meshed) a local program, cached."""
+        if exec_key in self._cache:
+            return self._cache[exec_key]
+        fn = make_fn()
+        if self.mesh is None:
+            out = jax.jit(partial(fn, axis=None))
+        else:
+            axes = _axes(self.part_axis)
+            in_specs = (P(axes),) + (P(),) * (fn.n_query_args + 1)
+            wrapped = _shard_map_wrap(partial(fn, axis=axes), self.mesh,
+                                      in_specs, P())
+            out = jax.jit(wrapped)
+        self._cache[exec_key] = out
+        return out
+
+    def _call(self, fn, *args):
+        self.dispatches += 1
+        return fn(self.parts, self.bounds, *args)
+
+    def _all_ok(self, ok) -> bool:
+        """The ONLY host-blocking read in the executor (counted)."""
+        self.host_syncs += 1
+        return bool(jnp.all(ok))
+
+    def _set_sticky(self, base, variant):
+        old = self._sticky.get(base)
+        self._sticky[base] = variant
+        if old != variant:
+            self._evict(base)
+
+    def _evict(self, base):
+        """Drop superseded cap-variants: keep sticky + initial tier.
+
+        Escalated ``(cap, cand)`` executables for smaller caps are dead
+        weight once a larger sticky tier is established — without this,
+        long-running serving leaks one compiled program per escalation
+        step (the seed engine's ``_jits`` bug).
+        """
+        keep = {self._sticky.get(base), self._initial.get(base)}
+        for key in list(self._cache):
+            if (isinstance(key, tuple) and len(key) == 3 and
+                    key[0] == base and key[1] in ("w", "fused") and
+                    key[2] not in keep):
+                del self._cache[key]
+
+    def cache_variants(self, base) -> list:
+        """Cached (tag, (cap, cand)) window variants for one sticky key."""
+        return sorted((k[1], k[2]) for k in self._cache
+                      if isinstance(k, tuple) and len(k) == 3 and
+                      k[0] == base and k[1] in ("w", "fused"))
+
+    def stats(self) -> dict:
+        return {"host_syncs": self.host_syncs,
+                "dispatches": self.dispatches,
+                "cache_size": len(self._cache),
+                "sticky": dict(self._sticky)}
+
+    def maintain(self) -> dict:
+        """Deferred re-tuning: host-check the stashed ok flags of recent
+        zero-sync runs and escalate sticky tiers that overflowed.
+
+        Call OFF the serving hot path (between batches, on a timer).
+        Counts stay exact either way — overflowed fused runs already
+        fell back on device — but escalating restores complete
+        materialization windows and stops paying the fallback cost
+        every request. Returns {sticky_key: new (cap, cand)} for the
+        tiers that moved.
+        """
+        moved = {}
+        for base, (tier, ok) in list(self._pending.items()):
+            del self._pending[base]
+            if self._sticky.get(base) != tier:
+                continue   # stale: sticky already moved since the stash
+            if self._all_ok(ok):
+                continue
+            new = self._escalators[base](*tier)
+            if new != tier:
+                self._set_sticky(base, new)
+                moved[base] = new
+        return moved
+
+    # -- public entry points ---------------------------------------------
+
+    def run(self, spec: QuerySpec, *args, strict: bool = False):
+        """Execute one QuerySpec. See class docstring for ``strict``."""
+        if not isinstance(spec, QuerySpec):
+            raise TypeError(f"expected a QuerySpec, got {spec!r}")
+        if len(args) != spec.n_args:
+            raise TypeError(f"{type(spec).__name__} takes {spec.n_args} "
+                            f"data arguments, got {len(args)}")
+        if isinstance(spec, PointQuery):
+            return self._run_point(args)
+        if isinstance(spec, RangeCount):
+            return self._run_range_count(args)
+        if isinstance(spec, RangeQuery):
+            return self._run_range(spec, args, strict)
+        if isinstance(spec, CircleQuery):
+            return self._run_circle(spec, args, strict)
+        if isinstance(spec, Knn):
+            return self._run_knn(spec, args, strict)
+        if isinstance(spec, SpatialJoin):
+            return self._run_join(spec, args, strict)
+        raise TypeError(f"unknown QuerySpec: {spec!r}")
+
+    def run_batch(self, requests, strict: bool = False) -> list:
+        """Execute a mixed workload: iterable of (spec, *args) tuples.
+
+        Returns results in request order. Steady-state batches (every
+        spec sticky-hit) dispatch with zero host syncs.
+        """
+        return [self.run(req[0], *req[1:], strict=strict)
+                for req in requests]
+
+    # -- shared adaptive policy ------------------------------------------
+
+    def _adaptive(self, op: _AdaptiveOp, pargs, strict: bool,
+                  start: Optional[Tuple[int, int]] = None):
+        """Sticky + geometric escalation + exact fallback — ONCE.
+
+        Replaces the divergent copies the seed engine kept in
+        range_query / knn / join_count. ``start`` marks a one-off
+        user-tier override: it never UPDATES the shared sticky state,
+        so a single cheap capped query cannot downgrade the serving
+        tier (and evict its compiled fused executable).
+        """
+        self._initial.setdefault(op.base, op.initial)
+        self._escalators[op.base] = op.escalate
+        sticky = self._sticky.get(op.base)
+        if (sticky is not None and not strict and op.fused is not None
+                and start is None):
+            # steady state: fused windowed+fallback program, no host
+            # sync; the ok flags are stashed (not read) so maintain()
+            # can re-tune the sticky tier off the hot path
+            fn = self._compile((op.base, "fused", sticky),
+                               lambda: op.fused(*sticky))
+            out, ok = self._call(fn, *pargs)
+            self._pending[op.base] = (sticky, ok)
+            return op.post(out)
+        cap, cand = start or sticky or op.initial
+        while True:
+            fn = self._compile((op.base, "w", (cap, cand)),
+                               lambda: op.window(cap, cand))
+            res = self._call(fn, *pargs)
+            hit = self._all_ok(op.get_ok(res))
+            maxed = op.maxed(cap, cand)
+            if hit or (maxed and op.sticky_on_maxed):
+                if start is None:
+                    self._set_sticky(op.base, (cap, cand))
+                return op.finalize(res)
+            if maxed:
+                break
+            cap, cand = op.escalate(cap, cand)
+        return op.fallback(pargs, res)
+
+    def _maxed_both(self, cap, cand):
+        return (cap >= self.index.n_pad and
+                cand >= self.index.num_partitions)
+
+    def _escalate_both(self, cap, cand):
+        return (min(cap * 4, self.index.n_pad),
+                min(cand * 2, self.index.num_partitions))
+
+    # -- per-kind preparation + drivers ----------------------------------
+
+    def _qkeys(self, qx, qy):
+        return K.keys_to_f32(K.make_keys(qx, qy, self.spec))
+
+    def _rect_keys(self, rects):
+        klo, khi = K.rect_key_range(rects, self.spec)
+        return K.keys_to_f32(klo), K.keys_to_f32(khi)
+
+    def _run_point(self, args):
+        qx = jnp.asarray(args[0], jnp.float32)
+        qy = jnp.asarray(args[1], jnp.float32)
+        qk = self._qkeys(qx, qy)
+        fn = self._compile(("point",),
+                           lambda: L._PointLocal(self.index, self.cfg))
+        return self._call(fn, qx, qy, qk) > 0
+
+    def _run_range_count(self, args):
+        rects = jnp.asarray(args[0], jnp.float32)
+        klo, khi = self._rect_keys(rects)
+        fn = self._compile(("range_count",),
+                           lambda: L._RangeCountLocal(self.index,
+                                                      self.cfg))
+        return self._call(fn, rects, klo, khi)
+
+    def _op_range(self, base):
+        idx, cfg = self.index, self.cfg
+
+        def fused(cap, cand):
+            # counts stay exact via the on-device full-refine fallback;
+            # ok still flags per-query materialization completeness
+            return L._CondFusedLocal(
+                idx, cfg,
+                primary=L._RangeWindowLocal(idx, cfg, cap, cand),
+                fallback=L._RangeCountLocal(idx, cfg),
+                fb_args=(0, 1, 2),
+                get_ok=lambda pri: pri[2],
+                merge_ok=lambda pri: pri,
+                merge_fb=lambda pri, fb: (fb, pri[1], pri[2]))
+
+        return _AdaptiveOp(
+            base=base, initial=(cfg.range_cap, cfg.range_cand),
+            window=lambda cap, cand: L._RangeWindowLocal(idx, cfg, cap,
+                                                         cand),
+            get_ok=lambda res: res[2], finalize=lambda res: res,
+            escalate=self._escalate_both, maxed=self._maxed_both,
+            sticky_on_maxed=True, fallback=None, fused=fused)
+
+    def _run_range(self, spec: RangeQuery, args, strict):
+        rects = jnp.asarray(args[0], jnp.float32)
+        klo, khi = self._rect_keys(rects)
+        op = self._op_range(spec.sticky_key())
+        start = None
+        if spec.cap is not None:
+            # user cap overrides the starting tier; cand follows sticky
+            _, cand0 = self._sticky.get(op.base, op.initial)
+            start = (min(spec.cap, self.index.n_pad), cand0)
+        return self._adaptive(op, (rects, klo, khi), strict, start=start)
+
+    def _op_circle(self, base, materialize: bool):
+        idx, cfg = self.index, self.cfg
+
+        def window(cap, cand):
+            return L._CircleWindowLocal(idx, cfg, cap, cand, materialize)
+
+        def fused(cap, cand):
+            if materialize:
+                return L._CondFusedLocal(
+                    idx, cfg, primary=window(cap, cand),
+                    fallback=L._CircleCountLocal(idx, cfg),
+                    fb_args=(0, 1, 2, 3),
+                    get_ok=lambda pri: pri[2],
+                    merge_ok=lambda pri: pri,
+                    merge_fb=lambda pri, fb: (fb, pri[1], pri[2]))
+            return L._CondFusedLocal(
+                idx, cfg, primary=window(cap, cand),
+                fallback=L._CircleCountLocal(idx, cfg),
+                fb_args=(0, 1, 2, 3),
+                get_ok=lambda pri: pri[1],
+                merge_ok=lambda pri: pri[0],
+                merge_fb=lambda pri, fb: fb)
+
+        def fallback(pargs, res):
+            fn = self._compile(("circle_exact",),
+                               lambda: L._CircleCountLocal(idx, cfg))
+            cnt = self._call(fn, *pargs)
+            if materialize:    # exact counts; window ids flagged by ok
+                return cnt, res[1], res[2]
+            return cnt
+
+        return _AdaptiveOp(
+            base=base,
+            initial=(cfg.circle_cap, cfg.circle_cand), window=window,
+            get_ok=lambda res: res[-1],
+            finalize=(lambda res: res) if materialize
+            else (lambda res: res[0]),
+            escalate=self._escalate_both, maxed=self._maxed_both,
+            sticky_on_maxed=False, fallback=fallback, fused=fused)
+
+    def _run_circle(self, spec: CircleQuery, args, strict):
+        cx = jnp.asarray(args[0], jnp.float32)
+        cy = jnp.asarray(args[1], jnp.float32)
+        r = jnp.asarray(args[2], jnp.float32)
+        rects = jnp.stack([cx - r, cy - r, cx + r, cy + r], axis=-1)
+        klo, khi = self._rect_keys(rects)
+        circ = jnp.stack([cx, cy, r], axis=-1)
+        op = self._op_circle(spec.sticky_key(), spec.materialize)
+        return self._adaptive(op, (rects, klo, khi, circ), strict)
+
+    def _knn_r0(self, qx, qy, k):
+        # Paper Eq. (1): r = sqrt(k / (pi * d)) — refined with the LOCAL
+        # density of each query's nearest partition (beyond-paper: the
+        # global-density estimate needs many expansion rounds in sparse
+        # regions; the per-partition counts are free in the global index)
+        r0g = float(np.sqrt(max(k, 1) / (np.pi * self.density)))
+        bd2 = Q.box_min_dist2(qx, qy, self.bounds)
+        pid0 = jnp.argmin(bd2, axis=1)
+        b0 = self.bounds[pid0]
+        area0 = jnp.maximum((b0[:, 2] - b0[:, 0]) *
+                            (b0[:, 3] - b0[:, 1]), 1e-30)
+        d0 = jnp.maximum(self.index.count[pid0] / area0, 1e-30)
+        r0 = jnp.sqrt(k / (jnp.pi * d0)).astype(jnp.float32)
+        return jnp.maximum(r0, r0g)
+
+    def _knn_exact_fn(self, k):
+        return self._compile(("knn_exact", k),
+                             lambda: L._KnnExactLocal(self.index,
+                                                      self.cfg, k))
+
+    def _op_knn(self, base, k):
+        idx, cfg = self.index, self.cfg
+        cand = cfg.knn_cand
+
+        def window(cap, _cand):
+            return L._KnnPrunedLocal(idx, cfg, k, self.spec, cand, cap)
+
+        def fused(cap, _cand):
+            def merge_fb(pri, fb):
+                okc = pri[2][:, None]
+                return (jnp.where(okc, pri[0], fb[0]),
+                        jnp.where(okc, pri[1], fb[1]))
+
+            return L._CondFusedLocal(
+                idx, cfg, primary=window(cap, cand),
+                fallback=L._KnnExactLocal(idx, cfg, k), fb_args=(0, 1),
+                get_ok=lambda pri: pri[2],
+                merge_ok=lambda pri: (pri[0], pri[1]),
+                merge_fb=merge_fb)
+
+        def fallback(pargs, res):
+            # final fallback for unresolved queries: exact scan
+            neg, vid, ok = res
+            nege, vide = self._call(self._knn_exact_fn(k), *pargs[:2])
+            okc = ok[:, None]
+            return (jnp.where(okc, -neg, -nege),
+                    jnp.where(okc, vid, vide))
+
+        return _AdaptiveOp(
+            base=base, initial=(cfg.knn_cap, cand), window=window,
+            get_ok=lambda res: res[2],
+            finalize=lambda res: (-res[0], res[1]),
+            escalate=lambda cap, cd: (min(cap * 4, idx.n_pad), cd),
+            maxed=lambda cap, cd: cap >= idx.n_pad,
+            sticky_on_maxed=False, fallback=fallback, fused=fused,
+            post=lambda r: (-r[0], r[1]))
+
+    def _run_knn(self, spec: Knn, args, strict):
+        qx = jnp.asarray(args[0], jnp.float32)
+        qy = jnp.asarray(args[1], jnp.float32)
+        if spec.mode == "exact":
+            neg, vid = self._call(self._knn_exact_fn(spec.k), qx, qy)
+            return -neg, vid
+        r0 = self._knn_r0(qx, qy, spec.k)
+        op = self._op_knn(spec.sticky_key(), spec.k)
+        return self._adaptive(op, (qx, qy, r0), strict)
+
+    def _op_join(self, base):
+        idx, cfg = self.index, self.cfg
+
+        def fused(cap, cand):
+            return L._CondFusedLocal(
+                idx, cfg, primary=L._JoinLocal(idx, cfg, cap, cand),
+                fallback=L._JoinFullLocal(idx, cfg), fb_args=(0, 1, 2),
+                get_ok=lambda pri: pri[1],
+                merge_ok=lambda pri: pri[0],
+                merge_fb=lambda pri, fb: fb)
+
+        def fallback(pargs, res):
+            fn = self._compile(("join_full",),
+                               lambda: L._JoinFullLocal(idx, cfg))
+            return self._call(fn, *pargs)
+
+        return _AdaptiveOp(
+            base=base, initial=(cfg.join_cap, cfg.join_cand),
+            window=lambda cap, cand: L._JoinLocal(idx, cfg, cap, cand),
+            get_ok=lambda res: res[1], finalize=lambda res: res[0],
+            escalate=self._escalate_both, maxed=self._maxed_both,
+            sticky_on_maxed=False, fallback=fallback, fused=fused)
+
+    def _run_join(self, spec: SpatialJoin, args, strict):
+        polys = jnp.asarray(args[0], jnp.float32)
+        n_edges = jnp.asarray(args[1], jnp.int32)
+        em = L._edge_mask(polys, n_edges)
+        mbrs = jnp.concatenate([
+            jnp.min(jnp.where(em, polys, 3e38), axis=1),
+            jnp.max(jnp.where(em, polys, -3e38), axis=1)], axis=-1)
+        klo, khi = self._rect_keys(mbrs)
+        mbr_k = jnp.concatenate([mbrs, klo[:, None], khi[:, None]],
+                                axis=-1)
+        pargs = (polys, n_edges, mbr_k)
+        if spec.mode == "full":
+            fn = self._compile(("join_full",),
+                               lambda: L._JoinFullLocal(self.index,
+                                                        self.cfg))
+            return self._call(fn, *pargs)
+        op = self._op_join(spec.sticky_key())
+        return self._adaptive(op, pargs, strict)

@@ -1,0 +1,581 @@
+"""Per-shard local query programs (paper §3-4, DESIGN.md §2/§9).
+
+Each class below is a local SPMD program: a callable
+``fn(parts, bounds, *query_args, axis=...)`` with attribute
+``n_query_args`` so the executor knows its signature. ``bounds`` is the
+REPLICATED global index; ``parts`` leaves are LOCAL partition shards.
+The executor (core/executor.py) owns jit + shard_map wrapping, the
+executable cache, and the adaptive-cap policy; nothing here retries or
+synchronizes with the host.
+
+Merging collectives per query batch:
+
+  point  -> psum (boolean OR as integer sum)
+  range  -> psum of counts / all_gather of windowed candidate ids
+  kNN    -> per-shard top-k, all_gather, merge top-k
+  join   -> psum of per-polygon counts
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import keys as K
+from repro.core import queries as Q
+from repro.core.build import LearnedSpatialIndex
+from repro.core.plan import EngineConfig
+
+EMPTY_BOX = np.asarray([3e38, 3e38, -3e38, -3e38], np.float32)
+
+
+def pad_partitions(index: LearnedSpatialIndex, multiple: int
+                   ) -> LearnedSpatialIndex:
+    """Pad the partition axis with empty partitions (never match queries)."""
+    p = index.num_partitions
+    p_pad = int(np.ceil(p / multiple) * multiple)
+    if p_pad == p:
+        return index
+    extra = p_pad - p
+
+    def pad(a, fill):
+        pad_block = jnp.full((extra,) + a.shape[1:], fill, a.dtype)
+        return jnp.concatenate([a, pad_block], axis=0)
+
+    return dataclasses.replace(
+        index,
+        key=pad(index.key, index.key_spec.sentinel),
+        x=pad(index.x, 3e38), y=pad(index.y, 3e38), vid=pad(index.vid, -1),
+        count=pad(index.count, 0),
+        knot_keys=pad(index.knot_keys, 3e38),
+        knot_pos=pad(index.knot_pos, 0.0),
+        n_knots=pad(index.n_knots, 0),
+        radix_table=pad(index.radix_table, 0),
+        radix_kmin=pad(index.radix_kmin, 0.0),
+        radix_scale=pad(index.radix_scale, 0.0),
+        part_bounds=jnp.concatenate(
+            [index.part_bounds,
+             jnp.broadcast_to(jnp.asarray(EMPTY_BOX), (extra, 4))], axis=0),
+    )
+
+
+def part_arrays(index: LearnedSpatialIndex) -> dict:
+    """Shardable dict-of-arrays view (leading axis = partitions)."""
+    return {
+        "keys_f": K.keys_to_f32(index.key),
+        "x": index.x, "y": index.y, "vid": index.vid,
+        "count": index.count,
+        "knot_keys": index.knot_keys, "knot_pos": index.knot_pos,
+        "n_knots": index.n_knots, "radix_table": index.radix_table,
+        "radix_kmin": index.radix_kmin, "radix_scale": index.radix_scale,
+    }
+
+
+def _map_parts(f, parts, chunk: int, init=None):
+    """Sequential lax.map over partition chunks (bounds peak memory).
+
+    f(chunk_parts, carry) -> carry ; chunk_parts leaves (C, ...).
+    """
+    p = parts["count"].shape[0]
+    c = min(chunk, p)
+    assert p % c == 0, (p, c)
+    chunked = jax.tree_util.tree_map(
+        lambda a: a.reshape((p // c, c) + a.shape[1:]), parts)
+
+    def step(carry, ch):
+        return f(ch, carry), None
+
+    carry, _ = jax.lax.scan(step, init, chunked)
+    return carry
+
+
+def _edge_mask(polys, n_edges):
+    e = polys.shape[1]
+    return (jnp.arange(e)[None, :, None] < n_edges[:, None, None])
+
+
+def _axes(axis):
+    return axis if isinstance(axis, tuple) else (axis,)
+
+
+def _psum(x, axis):
+    return x if axis is None else jax.lax.psum(x, axis)
+
+
+def _top_candidates(flags, c: int):
+    """First C true columns per row of (Q, P) flags.
+
+    Returns (pids (Q, C) int32, valid (Q, C), within (Q,) — True when the
+    row had <= C candidates, i.e. the result is complete)."""
+    qn, p = flags.shape
+    c = min(c, p)
+    order = jnp.argsort(~flags, axis=1, stable=True)[:, :c]
+    valid = jnp.take_along_axis(flags, order, axis=1)
+    within = jnp.sum(flags.astype(jnp.int32), axis=1) <= c
+    return order.astype(jnp.int32), valid, within
+
+
+def _keep_window(vids, cnt, cap: int):
+    """Compact materialized ids to the front, bounded keep width.
+
+    Returns (vids (Q, keep), cap_ok (Q,) — True when no id was dropped).
+    """
+    order = jnp.argsort(-(vids >= 0).astype(jnp.int32), axis=1,
+                        stable=True)
+    keep = min(vids.shape[1], max(cap * 8, 256))
+    vids = jnp.take_along_axis(vids, order[:, :keep], axis=1)
+    cap_ok = jnp.sum((vids >= 0).astype(jnp.int32), axis=1) == cnt
+    return vids, cap_ok
+
+
+# ---------------------------------------------------------------------------
+# local programs
+# ---------------------------------------------------------------------------
+
+class _LocalFn:
+    def __init__(self, index: LearnedSpatialIndex, cfg: EngineConfig):
+        self.kw = dict(radix_bits=index.radix_bits, probe=index.probe)
+        self.cfg = cfg
+        self.p_total = index.num_partitions
+        self.n_pad = index.n_pad
+        self.spec = index.key_spec
+
+    def _local_offset(self, axis, p_loc):
+        if axis is None:
+            return jnp.int32(0)
+        idx = jnp.int32(0)
+        mul = jnp.int32(1)
+        for a in reversed(axis):
+            idx = idx + jax.lax.axis_index(a) * mul
+            # psum(1) == axis size; works on jax versions without
+            # jax.lax.axis_size
+            mul = mul * jax.lax.psum(1, a)
+        return idx * p_loc
+
+
+class _PointLocal(_LocalFn):
+    n_query_args = 3
+
+    def __call__(self, parts, bounds, qx, qy, qk, *, axis):
+        p_loc = parts["count"].shape[0]
+        off = self._local_offset(axis, p_loc)
+        # global filter: first-match grid (paper Alg. 1 semantics) and the
+        # overflow grid are the only partitions that can contain the point.
+        inb = Q.point_in_box(qx, qy, bounds[:-1])        # (Q, G)
+        hit = jnp.any(inb, axis=1)
+        pid1 = jnp.where(hit, jnp.argmax(inb, axis=1).astype(jnp.int32),
+                         self.p_total - 1)
+        pid2 = jnp.full_like(pid1, self.p_total - 1)      # overflow grid
+
+        def probe_pid(pid):
+            lid = pid - off
+            mine = (lid >= 0) & (lid < p_loc)
+            lid = jnp.clip(lid, 0, p_loc - 1)
+
+            def one(l, m, kq, ax, ay):
+                part = jax.tree_util.tree_map(lambda a: a[l], parts)
+                f, _ = Q.point_query_partition(
+                    part, kq[None], ax[None], ay[None], **self.kw)
+                return f[0] & m
+
+            return jax.vmap(one)(lid, mine, qk, qx, qy)
+
+        found = probe_pid(pid1) | probe_pid(pid2)
+        return _psum(found.astype(jnp.int32), axis)
+
+
+class _RangeCountLocal(_LocalFn):
+    n_query_args = 3
+
+    def __call__(self, parts, bounds, rects, klo, khi, *, axis):
+        p_loc = parts["count"].shape[0]
+        off = self._local_offset(axis, p_loc)
+        overlap = Q.rect_overlaps_box(rects, bounds)      # (Q, P_total)
+
+        def chunk_fn(ch, carry):
+            c = ch["count"].shape[0]
+            base = carry["i"] * c + off
+
+            def one(j, part):
+                act = jax.lax.dynamic_index_in_dim(
+                    overlap, base + j, axis=1, keepdims=False)
+                cnt, _ = Q.range_count_partition(
+                    part, rects, klo, khi, active=act, **self.kw)
+                return cnt
+
+            cnts = jax.vmap(one)(jnp.arange(c), ch)       # (C, Q)
+            return {"i": carry["i"] + 1,
+                    "acc": carry["acc"] + jnp.sum(cnts, axis=0)}
+
+        out = _map_parts(chunk_fn, parts, self.cfg.part_chunk,
+                         init={"i": jnp.int32(0),
+                               "acc": jnp.zeros(rects.shape[0], jnp.int32)})
+        return _psum(out["acc"], axis)
+
+
+class _CircleCountLocal(_LocalFn):
+    """Exact full-refine circle count (fallback / gridonly baseline)."""
+
+    n_query_args = 4
+
+    def __call__(self, parts, bounds, rects, klo, khi, circ, *, axis):
+        p_loc = parts["count"].shape[0]
+        off = self._local_offset(axis, p_loc)
+        overlap = Q.rect_overlaps_box(rects, bounds)
+
+        def chunk_fn(ch, carry):
+            c = ch["count"].shape[0]
+            base = carry["i"] * c + off
+
+            def one(j, part):
+                act = jax.lax.dynamic_index_in_dim(
+                    overlap, base + j, axis=1, keepdims=False)
+                _, m = Q.range_count_partition(
+                    part, rects, klo, khi, active=act, **self.kw)
+                dx = part["x"][None, :] - circ[:, 0:1]
+                dy = part["y"][None, :] - circ[:, 1:2]
+                inc = (dx * dx + dy * dy) <= circ[:, 2:3] ** 2
+                return jnp.sum((m & inc).astype(jnp.int32), axis=1)
+
+            cnts = jax.vmap(one)(jnp.arange(c), ch)
+            return {"i": carry["i"] + 1,
+                    "acc": carry["acc"] + jnp.sum(cnts, axis=0)}
+
+        out = _map_parts(chunk_fn, parts, self.cfg.part_chunk,
+                         init={"i": jnp.int32(0),
+                               "acc": jnp.zeros(rects.shape[0], jnp.int32)})
+        return _psum(out["acc"], axis)
+
+
+class _RangeWindowLocal(_LocalFn):
+    """Query-centric windowed range query (the paper's two-phase shape):
+    phase 1 selects the <=C candidate partitions per query from the
+    replicated global index; phase 2 gathers ONLY each candidate's
+    learned key interval (cap slots). Work ~ Q x C x cap, independent of
+    the total partition count and of partition size."""
+
+    n_query_args = 3
+
+    def __init__(self, index, cfg, cap, cand):
+        super().__init__(index, cfg)
+        self.cap = min(cap, index.n_pad)
+        self.cand = cand
+
+    def __call__(self, parts, bounds, rects, klo, khi, *, axis):
+        del klo, khi   # recomputed per-candidate with clipping
+        p_loc = parts["count"].shape[0]
+        off = self._local_offset(axis, p_loc)
+        qn = rects.shape[0]
+        overlap = Q.rect_overlaps_box(rects, bounds)       # (Q, P_total)
+        pids, valid, within = _top_candidates(overlap, self.cand)
+        boxes = bounds[pids.reshape(-1)].reshape(qn, self.cand, 4)
+        local = pids - off
+        mine = valid & (local >= 0) & (local < p_loc)
+        local = jnp.clip(local, 0, p_loc - 1)
+        cnts, vids, ok, _, _ = Q.range_window_at(
+            parts, boxes, local, mine, rects, self.spec, cap=self.cap,
+            **self.kw)
+        cnt = _psum(jnp.sum(cnts, axis=1), axis)
+        vids = vids.reshape(qn, -1)
+        okq = jnp.all(ok | ~mine, axis=1)
+        if axis is not None:
+            vids = jax.lax.all_gather(vids, axis, axis=1, tiled=True)
+            shards = jax.lax.psum(1, axis)
+            okq = jax.lax.psum(okq.astype(jnp.int32), axis) == shards
+        vids, cap_ok = _keep_window(vids, cnt, self.cap)
+        return cnt, vids, okq & within & cap_ok
+
+
+class _CircleWindowLocal(_LocalFn):
+    """Adaptive windowed circle query: MBR window gather (same phase-1/2
+    shape as _RangeWindowLocal) + distance refine on the gathered
+    candidates. Exact when ok; the executor escalates / falls back to
+    the full-refine _CircleCountLocal otherwise."""
+
+    n_query_args = 4
+
+    def __init__(self, index, cfg, cap, cand, materialize: bool):
+        super().__init__(index, cfg)
+        self.cap = min(cap, index.n_pad)
+        self.cand = cand
+        self.materialize = materialize
+
+    def __call__(self, parts, bounds, rects, klo, khi, circ, *, axis):
+        del klo, khi   # recomputed per-candidate with clipping
+        p_loc = parts["count"].shape[0]
+        off = self._local_offset(axis, p_loc)
+        qn = rects.shape[0]
+        overlap = Q.rect_overlaps_box(rects, bounds)
+        pids, valid, within = _top_candidates(overlap, self.cand)
+        boxes = bounds[pids.reshape(-1)].reshape(qn, self.cand, 4)
+        local = pids - off
+        mine = valid & (local >= 0) & (local < p_loc)
+        local = jnp.clip(local, 0, p_loc - 1)
+        _, vids, ok, wx, wy = Q.range_window_at(
+            parts, boxes, local, mine, rects, self.spec, cap=self.cap,
+            **self.kw)
+        # distance refine (paper Remark 2): the windowed gather covered
+        # the circle's MBR; keep only true in-circle points
+        d2 = ((wx - circ[:, 0, None, None]) ** 2 +
+              (wy - circ[:, 1, None, None]) ** 2)
+        inc = (vids >= 0) & (d2 <= circ[:, 2, None, None] ** 2)
+        cnt = _psum(jnp.sum(inc.astype(jnp.int32), axis=(1, 2)), axis)
+        okq = jnp.all(ok | ~mine, axis=1)
+        vids = jnp.where(inc, vids, -1).reshape(qn, -1)
+        if axis is not None:
+            vids = jax.lax.all_gather(vids, axis, axis=1, tiled=True)
+            shards = jax.lax.psum(1, axis)
+            okq = jax.lax.psum(okq.astype(jnp.int32), axis) == shards
+        if not self.materialize:
+            return cnt, okq & within
+        vids, cap_ok = _keep_window(vids, cnt, self.cap)
+        return cnt, vids, okq & within & cap_ok
+
+
+class _KnnExactLocal(_LocalFn):
+    n_query_args = 2
+
+    def __init__(self, index, cfg, k):
+        super().__init__(index, cfg)
+        self.k = k
+
+    def __call__(self, parts, bounds, qx, qy, *, axis):
+        qn = qx.shape[0]
+        k = self.k
+
+        def chunk_fn(ch, carry):
+            def one(part):
+                dx = part["x"][None, :] - qx[:, None]
+                dy = part["y"][None, :] - qy[:, None]
+                valid = jnp.arange(self.n_pad)[None, :] < part["count"]
+                d2 = jnp.where(valid, dx * dx + dy * dy, 3e38)
+                return -d2, jnp.broadcast_to(part["vid"][None, :],
+                                             d2.shape)
+
+            neg, vid = jax.vmap(one)(ch)                   # (C, Q, n_pad)
+            neg = jnp.swapaxes(neg, 0, 1).reshape(qn, -1)
+            vid = jnp.swapaxes(vid, 0, 1).reshape(qn, -1)
+            cand_n = jnp.concatenate([carry[0], neg], axis=1)
+            cand_v = jnp.concatenate([carry[1], vid], axis=1)
+            best_n, ix = jax.lax.top_k(cand_n, k)
+            best_v = jnp.take_along_axis(cand_v, ix, axis=1)
+            return best_n, best_v
+
+        init = (jnp.full((qn, k), -3e38, jnp.float32),
+                jnp.full((qn, k), -1, jnp.int32))
+        neg, vid = _map_parts(chunk_fn, parts, self.cfg.part_chunk, init)
+        if axis is not None:
+            neg = jax.lax.all_gather(neg, axis, axis=1, tiled=True)
+            vid = jax.lax.all_gather(vid, axis, axis=1, tiled=True)
+            best_n, ix = jax.lax.top_k(neg, k)
+            vid = jnp.take_along_axis(vid, ix, axis=1)
+            neg = best_n
+        return neg, vid
+
+
+class _KnnPrunedLocal(_LocalFn):
+    """Paper §4.3, query-centric: density-estimated radius, windowed
+    range gather over the <=C nearest candidate partitions, geometric
+    expansion until >=k verified in-circle candidates. Exact when ok;
+    the executor falls back to the full scan per unresolved query."""
+
+    n_query_args = 3
+
+    def __init__(self, index, cfg, k, spec, cand, cap):
+        super().__init__(index, cfg)
+        self.k = k
+        self.spec2 = spec
+        self.cand = cand
+        self.cap = min(cap, index.n_pad)
+
+    def __call__(self, parts, bounds, qx, qy, r0, *, axis):
+        qn = qx.shape[0]
+        k = self.k
+        cap = self.cap
+        cand = self.cand
+        p_loc = parts["count"].shape[0]
+        off = self._local_offset(axis, p_loc)
+        boxd2 = Q.box_min_dist2(qx, qy, bounds)            # (Q, P_total)
+        # C nearest partitions by box distance (static per query batch)
+        order = jnp.argsort(boxd2, axis=1)[:, :cand].astype(jnp.int32)
+        cand_d2 = jnp.take_along_axis(boxd2, order, axis=1)
+        boxes = bounds[order.reshape(-1)].reshape(qn, cand, 4)
+        local = order - off
+        inshard = (local >= 0) & (local < p_loc)
+        local = jnp.clip(local, 0, p_loc - 1)
+
+        def gather_round(r):
+            rects = jnp.stack([qx - r, qy - r, qx + r, qy + r], axis=-1)
+            active = inshard & (cand_d2 <= (r * r)[:, None])
+            # coverage: every partition within r must be a candidate
+            covered = jnp.sum((boxd2 <= (r * r)[:, None]).astype(
+                jnp.int32), axis=1) <= cand
+            cnts, vids, ok, wx, wy = Q.range_window_at(
+                parts, boxes, local, active, rects, self.spec2,
+                cap=cap, **self.kw)
+            d2 = ((wx - qx[:, None, None]) ** 2 +
+                  (wy - qy[:, None, None]) ** 2)
+            inc = (vids >= 0) & (d2 <= (r * r)[:, None, None])
+            negd = jnp.where(inc, -d2, -3e38).reshape(qn, -1)
+            wv = jnp.where(inc, vids, -1).reshape(qn, -1)
+            bn, ix = jax.lax.top_k(negd, k)
+            bv = jnp.take_along_axis(wv, ix, axis=1)
+            cnt = jnp.sum(inc.astype(jnp.int32), axis=(1, 2))
+            okq = jnp.all(ok | ~active, axis=1) & covered
+            if axis is not None:
+                bn_g = jax.lax.all_gather(bn, axis, axis=1, tiled=True)
+                bv_g = jax.lax.all_gather(bv, axis, axis=1, tiled=True)
+                bn, ix = jax.lax.top_k(bn_g, k)
+                bv = jnp.take_along_axis(bv_g, ix, axis=1)
+                cnt = jax.lax.psum(cnt, axis)
+                okq = jax.lax.psum(okq.astype(jnp.int32), axis) == \
+                    jax.lax.psum(1, axis)
+            return bn, bv, okq, cnt
+
+        def cond(state):
+            rounds, r, done, *_ = state
+            return (rounds < self.cfg.knn_max_rounds) & ~jnp.all(done)
+
+        def body(state):
+            rounds, r, done, bn, bv, okc = state
+            bn2, bv2, ok2, cnt2 = gather_round(r)
+            newly = (cnt2 >= k) & ok2 & ~done
+            bn = jnp.where(newly[:, None], bn2, bn)
+            bv = jnp.where(newly[:, None], bv2, bv)
+            okc = okc | newly
+            done2 = done | newly | ~ok2        # overflow -> fallback
+            r2 = jnp.where(done2, r, r * 2.0)
+            return rounds + 1, r2, done2, bn, bv, okc
+
+        state = (jnp.int32(0), r0, jnp.zeros(qn, bool),
+                 jnp.full((qn, k), -3e38, jnp.float32),
+                 jnp.full((qn, k), -1, jnp.int32), jnp.zeros(qn, bool))
+        _, _, done, bn, bv, okc = jax.lax.while_loop(cond, body, state)
+        return bn, bv, okc & done
+
+
+class _JoinLocal(_LocalFn):
+    """Query-centric windowed broadcast join: per polygon, gather only
+    the learned MBR interval of its <=C candidate partitions, refine by
+    ray casting on those <= C*cap points."""
+
+    n_query_args = 3
+
+    def __init__(self, index, cfg, cap, cand):
+        super().__init__(index, cfg)
+        self.cap = min(cap, index.n_pad)
+        self.cand = cand
+
+    def __call__(self, parts, bounds, polys, n_edges, mbr_k, *, axis):
+        pg = polys.shape[0]
+        p_loc = parts["count"].shape[0]
+        off = self._local_offset(axis, p_loc)
+        mbrs = mbr_k[:, :4]
+        overlap = Q.rect_overlaps_box(mbrs, bounds)
+        pids, valid, within = _top_candidates(overlap, self.cand)
+        boxes = bounds[pids.reshape(-1)].reshape(pg, self.cand, 4)
+        local = pids - off
+        mine = valid & (local >= 0) & (local < p_loc)
+        local = jnp.clip(local, 0, p_loc - 1)
+        cnts, vids, ok, wx, wy = Q.range_window_at(
+            parts, boxes, local, mine, mbrs, self.spec, cap=self.cap,
+            z_depth=3, **self.kw)
+
+        def pip(poly, ne, wxq, wyq, vq):
+            inside = Q.point_in_polygon(wxq.reshape(-1),
+                                        wyq.reshape(-1), poly, ne)
+            return jnp.sum(((vq.reshape(-1) >= 0) & inside
+                            ).astype(jnp.int32))
+
+        cnt = jax.vmap(pip)(polys, n_edges, wx, wy, vids)
+        cnt = _psum(cnt, axis)
+        okq = jnp.all(ok | ~mine, axis=1)
+        if axis is not None:
+            shards = jax.lax.psum(1, axis)
+            okq = jax.lax.psum(okq.astype(jnp.int32), axis) == shards
+        return cnt, okq & within
+
+
+class _JoinFullLocal(_LocalFn):
+    """Exact full-refine join (fallback / gridonly baseline)."""
+
+    n_query_args = 3
+
+    def __call__(self, parts, bounds, polys, n_edges, mbr_k, *, axis):
+        pg = polys.shape[0]
+        p_loc = parts["count"].shape[0]
+        off = self._local_offset(axis, p_loc)
+        mbrs, klo, khi = mbr_k[:, :4], mbr_k[:, 4], mbr_k[:, 5]
+        overlap = Q.rect_overlaps_box(mbrs, bounds)
+
+        def chunk_fn(ch, carry):
+            c = ch["count"].shape[0]
+            base = carry["i"] * c + off
+
+            def one(j, part):
+                act = jax.lax.dynamic_index_in_dim(
+                    overlap, base + j, axis=1, keepdims=False)
+                _, m = Q.range_count_partition(
+                    part, mbrs, klo, khi, active=act, **self.kw)  # (PG, n)
+
+                def pip(poly, ne, mask):
+                    inside = Q.point_in_polygon(part["x"], part["y"],
+                                                poly, ne)
+                    return jnp.sum((mask & inside).astype(jnp.int32))
+
+                return jax.vmap(pip)(polys, n_edges, m)
+
+            cnts = jax.vmap(one)(jnp.arange(c), ch)       # (C, PG)
+            return {"i": carry["i"] + 1,
+                    "acc": carry["acc"] + jnp.sum(cnts, axis=0)}
+
+        out = _map_parts(chunk_fn, parts, self.cfg.part_chunk,
+                         init={"i": jnp.int32(0),
+                               "acc": jnp.zeros(pg, jnp.int32)})
+        return _psum(out["acc"], axis)
+
+
+class _CondFusedLocal(_LocalFn):
+    """Windowed primary + lax.cond exact fallback, fused in ONE program.
+
+    The steady-state zero-host-sync path (DESIGN.md §9): the primary
+    windowed attempt runs at the sticky (cap, cand); when any query
+    overflowed, lax.cond dispatches the exact fallback ON DEVICE — the
+    host never inspects ``ok``. The cond predicate is replicated (ok is
+    psum-merged in the primary), so all shards take the same branch.
+
+    primary(parts, bounds, *q)              -> pytree containing ok
+    fallback(parts, bounds, *q[fb_args])    -> exact pytree
+    merge_ok(pri) / merge_fb(pri, fb)       -> SAME output structure
+
+    Returns (merged_result, ok): the replicated per-query ok flags ride
+    along so the executor can stash them for a DEFERRED host check
+    (Executor.maintain) without syncing on the dispatch path.
+    """
+
+    def __init__(self, index, cfg, primary, fallback, fb_args,
+                 get_ok, merge_ok, merge_fb):
+        super().__init__(index, cfg)
+        self.primary = primary
+        self.fallback = fallback
+        self.fb_args = fb_args
+        self.get_ok = get_ok
+        self.merge_ok = merge_ok
+        self.merge_fb = merge_fb
+        self.n_query_args = primary.n_query_args
+
+    def __call__(self, parts, bounds, *q, axis):
+        pri = self.primary(parts, bounds, *q, axis=axis)
+        ok = self.get_ok(pri)
+
+        def on_ok(_):
+            return self.merge_ok(pri)
+
+        def on_overflow(_):
+            fb = self.fallback(parts, bounds,
+                               *[q[i] for i in self.fb_args], axis=axis)
+            return self.merge_fb(pri, fb)
+
+        return jax.lax.cond(jnp.all(ok), on_ok, on_overflow, None), ok

@@ -1,0 +1,184 @@
+"""Declarative query plans: frozen QuerySpec dataclasses (DESIGN.md §9).
+
+A QuerySpec describes WHAT to compute — query type plus the static
+parameters that shape its compiled program (k, materialization, an
+optional user cap). It deliberately carries no data and no tuning
+state: query arrays are passed to ``Executor.run(spec, *args)`` and the
+adaptive ``(cap, cand)`` window state is owned by the executor, keyed
+by ``spec.sticky_key()`` so every instance of an equal spec shares one
+compiled-executable cache line and one sticky entry.
+
+Two key kinds:
+
+  ``plan_key()``    canonical identity of the compiled program family
+                    (query type + static params). Equal specs — however
+                    constructed — produce equal plan keys.
+  ``sticky_key()``  identity of the adaptive-cap state. Coarser than
+                    plan_key: e.g. every RangeQuery shares "range"
+                    sticky state regardless of a user cap override.
+
+New query types are added here as one more frozen dataclass plus one
+local kernel — not another copy of the engine's retry loop (that lives
+once, in ``executor.Executor``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Initial window sizes for the adaptive executor (DESIGN.md §7)."""
+    part_chunk: int = 8          # partitions processed per lax.map step
+    range_cap: int = 64          # windowed-range candidate cap/partition
+    knn_cap: int = 64            # windowed kNN gather cap per partition
+    knn_max_rounds: int = 24     # radius doublings (covers any dataset)
+    join_cap: int = 128          # windowed join candidate cap/partition
+    range_cand: int = 8          # candidate partitions per range query
+    knn_cand: int = 8            # candidate partitions per kNN query
+    join_cand: int = 8           # candidate partitions per polygon
+    circle_cap: int = 64         # windowed circle candidate cap/partition
+    circle_cand: int = 8         # candidate partitions per circle query
+
+
+class QuerySpec:
+    """Base class for declarative query descriptions.
+
+    Subclasses are frozen dataclasses; equality and hashing follow the
+    canonicalized fields, so a spec is safe to use as a cache key.
+    """
+
+    kind: str = "?"
+    n_args: int = 0              # number of positional data arguments
+
+    def plan_key(self) -> Tuple:
+        """Canonical identity of this spec's compiled-program family."""
+        return (self.kind,)
+
+    def sticky_key(self) -> Tuple:
+        """Identity of the shared adaptive (cap, cand) state."""
+        return (self.kind,)
+
+
+def _as_int(v, name: str, *, optional: bool = False,
+            positive: bool = True) -> Optional[int]:
+    if v is None:
+        if optional:
+            return None
+        raise TypeError(f"{name} is required")
+    v = int(v)                  # canonicalize np.int64 / bool / etc.
+    if positive and v <= 0:
+        raise ValueError(f"{name} must be positive, got {v}")
+    return v
+
+
+def _as_choice(v, name: str, choices: Tuple[str, ...]) -> str:
+    v = str(v)
+    if v not in choices:
+        raise ValueError(f"{name} must be one of {choices}, got {v!r}")
+    return v
+
+
+@dataclasses.dataclass(frozen=True)
+class PointQuery(QuerySpec):
+    """Exact membership test. args: (qx (Q,), qy (Q,)) -> found (Q,) bool."""
+    kind = "point"
+    n_args = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class RangeCount(QuerySpec):
+    """Exact in-rect counts. args: (rects (Q, 4)) -> counts (Q,) int32."""
+    kind = "range_count"
+    n_args = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class RangeQuery(QuerySpec):
+    """Materializing windowed range query.
+
+    args: (rects (Q, 4)) -> (counts (Q,), vids (Q, W) padded -1, ok (Q,)).
+    ``cap`` optionally overrides the executor's initial per-partition
+    window; the adaptive state is still shared across all RangeQuery
+    instances (sticky_key "range").
+    """
+    kind = "range"
+    n_args = 1
+    cap: Optional[int] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "cap",
+                           _as_int(self.cap, "cap", optional=True))
+
+    def plan_key(self):
+        return (self.kind, self.cap)
+
+
+@dataclasses.dataclass(frozen=True)
+class CircleQuery(QuerySpec):
+    """Circle query via MBR window + distance refine (paper Remark 2).
+
+    args: (cx (Q,), cy (Q,), r (Q,)).
+    materialize=False -> counts (Q,) int32
+    materialize=True  -> (counts (Q,), vids (Q, W) padded -1, ok (Q,))
+    """
+    kind = "circle"
+    n_args = 3
+    materialize: bool = False
+
+    def __post_init__(self):
+        object.__setattr__(self, "materialize", bool(self.materialize))
+
+    def plan_key(self):
+        return (self.kind, self.materialize)
+
+    def sticky_key(self):
+        # materializing and counting variants gather different window
+        # widths — separate adaptive state
+        return (self.kind, self.materialize)
+
+
+@dataclasses.dataclass(frozen=True)
+class Knn(QuerySpec):
+    """Exact k nearest neighbours. args: (qx (Q,), qy (Q,)) ->
+    (d2 (Q, k), vid (Q, k))."""
+    kind = "knn"
+    n_args = 2
+    k: int = 10
+    mode: str = "pruned"
+
+    def __post_init__(self):
+        object.__setattr__(self, "k", _as_int(self.k, "k"))
+        object.__setattr__(self, "mode",
+                           _as_choice(self.mode, "mode",
+                                      ("pruned", "exact")))
+
+    def plan_key(self):
+        return (self.kind, self.k, self.mode)
+
+    def sticky_key(self):
+        return (self.kind, self.k)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpatialJoin(QuerySpec):
+    """Polygon-contains-points broadcast join counts.
+
+    args: (polys (PG, E, 2), n_edges (PG,)) -> counts (PG,) int32.
+    """
+    kind = "join"
+    n_args = 2
+    mode: str = "windowed"
+
+    def __post_init__(self):
+        object.__setattr__(self, "mode",
+                           _as_choice(self.mode, "mode",
+                                      ("windowed", "full")))
+
+    def plan_key(self):
+        return (self.kind, self.mode)
+
+
+ALL_SPEC_TYPES = (PointQuery, RangeCount, RangeQuery, CircleQuery, Knn,
+                  SpatialJoin)

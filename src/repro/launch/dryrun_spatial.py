@@ -25,7 +25,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import keys as CK
 from repro.core.build import LearnedSpatialIndex
-from repro.core.engine import (EngineConfig, SpatialEngine)
+from repro.core.executor import _shard_map_wrap
+from repro.core.plan import EngineConfig
 from repro.launch import hlo
 from repro.launch.mesh import make_production_mesh
 
@@ -60,7 +61,7 @@ def fake_index() -> LearnedSpatialIndex:
 
 
 def run(mesh_kind: str, out_dir: str):
-    import repro.core.engine as E
+    import repro.core.local_ops as E
 
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     chips = int(np.prod(list(mesh.shape.values())))
@@ -91,14 +92,8 @@ def run(mesh_kind: str, out_dir: str):
         axes = part_axis
         in_specs = (P(axes),) + (P(),) * (local_fn.n_query_args + 1)
         from functools import partial as fpartial
-        try:
-            wrapped = jax.shard_map(fpartial(local_fn, axis=axes),
-                                    mesh=mesh, in_specs=in_specs,
-                                    out_specs=P(), check_vma=False)
-        except TypeError:
-            wrapped = jax.shard_map(fpartial(local_fn, axis=axes),
-                                    mesh=mesh, in_specs=in_specs,
-                                    out_specs=P(), check_rep=False)
+        wrapped = _shard_map_wrap(fpartial(local_fn, axis=axes), mesh,
+                                  in_specs, P())
         t0 = time.time()
         lowered = jax.jit(wrapped, in_shardings=(
             parts_shard, rspec) + (rspec,) * len(qshapes)).lower(

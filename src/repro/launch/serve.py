@@ -1,6 +1,13 @@
-"""Serving driver: prefill + batched greedy decode.
+"""Serving drivers.
+
+LM serving (prefill + batched greedy decode):
 
 ``python -m repro.launch.serve --arch qwen2.5-3b --smoke --tokens 32``
+
+Spatial query serving (mixed QuerySpec workload through the unified
+adaptive executor — the paper's decision-analysis scenario):
+
+``python -m repro.launch.serve --spatial --n 200000 --rounds 8``
 """
 from __future__ import annotations
 
@@ -9,20 +16,12 @@ import time
 
 import jax
 
-from repro.configs import get_config
-from repro.data.tokens import make_batch
-from repro.models import build_model
-from repro.serve import generate
 
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--tokens", type=int, default=32)
-    args = ap.parse_args()
+def run_lm(args):
+    from repro.configs import get_config
+    from repro.data.tokens import make_batch
+    from repro.models import build_model
+    from repro.serve import generate
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)
@@ -37,6 +36,82 @@ def main():
     print(f"generated {out.shape} tokens in {dt:.2f}s "
           f"({n / dt:.1f} tok/s)")
     print(out[:, :16])
+
+
+def run_spatial(args):
+    import numpy as np
+
+    from repro.core import (CircleQuery, Knn, PointQuery, RangeCount,
+                            RangeQuery, SpatialJoin, build_index, fit)
+    from repro.data import spatial as ds
+    from repro.serve import SpatialServeSession
+
+    print(f"building index over {args.n} points ...")
+    x, y = ds.make("taxi", args.n, seed=0)
+    part = fit("kdtree", x, y, 64, seed=0)
+    session = SpatialServeSession(build_index(x, y, part))
+
+    rng = np.random.default_rng(1)
+    q = args.batch
+
+    def make_round(seed):
+        ix = rng.integers(0, args.n, q)
+        rects = ds.random_rects(q, 1e-5, part.bounds, seed=seed,
+                                centers=(x, y))
+        polys, ne = ds.random_polygons(max(q // 8, 4), part.bounds,
+                                       seed=seed)
+        return [(PointQuery(), x[ix], y[ix]),
+                (RangeCount(), rects),
+                (RangeQuery(), rects),
+                (CircleQuery(), x[ix], y[ix],
+                 np.full(q, 0.02, np.float32)),
+                (Knn(k=10), x[ix], y[ix]),
+                (SpatialJoin(), polys, ne)]
+
+    print("warmup (compilation + sticky tiers settle off the hot path)")
+    session.warmup(make_round(0))
+    syncs0 = session.stats()["host_syncs"]
+
+    for rnd in range(args.rounds):
+        reqs = make_round(rnd + 1)
+        t0 = time.perf_counter()
+        out = session.submit_batch(reqs)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        st = session.stats()
+        print(f"round {rnd}: {len(reqs)} mixed specs in {dt*1e3:7.2f} ms "
+              f"(host_syncs +{st['host_syncs'] - syncs0}, "
+              f"cache {st['cache_size']} executables)")
+        moved = session.maintain()       # re-tune OFF the hot path
+        if moved:
+            print(f"  maintain: escalated {moved}")
+        syncs0 = session.stats()["host_syncs"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spatial", action="store_true",
+                    help="serve mixed spatial QuerySpecs instead of an LM")
+    ap.add_argument("--arch")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="batch size (default: 4 for LM, 64 for "
+                         "--spatial)")
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--n", type=int, default=200_000)
+    ap.add_argument("--rounds", type=int, default=8)
+    args = ap.parse_args()
+    if args.spatial:
+        if args.batch is None:
+            args.batch = 64
+        run_spatial(args)
+    else:
+        if not args.arch:
+            ap.error("--arch is required unless --spatial")
+        if args.batch is None:
+            args.batch = 4
+        run_lm(args)
 
 
 if __name__ == "__main__":

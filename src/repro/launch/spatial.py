@@ -1,10 +1,11 @@
 """Spatial analytics driver — the paper's end-to-end serving scenario.
 
 Builds the distributed learned index over a synthetic city-scale dataset
-and serves batched spatial queries (point / range / kNN / join), printing
-build + per-query-type latencies. This is the LiLIS deployment unit: the
-same engine runs under the production mesh via --mesh host/pod (queries
-replicated, partitions sharded).
+and serves batched spatial queries (point / range / circle / kNN / join)
+through the unified adaptive executor, printing build + per-QuerySpec
+latencies. This is the LiLIS deployment unit: the same executor runs
+under the production mesh via --mesh host (queries replicated,
+partitions sharded).
 
 ``python -m repro.launch.spatial --n 1000000 --partitions 64 --queries 256``
 """
@@ -16,7 +17,9 @@ import time
 import jax
 import numpy as np
 
-from repro.core import SpatialEngine, build_index, fit
+from repro.core import (CircleQuery, Executor, Knn, PointQuery,
+                        RangeCount, RangeQuery, SpatialJoin, build_index,
+                        fit)
 from repro.data import spatial as ds
 from repro.launch.mesh import make_host_mesh
 
@@ -53,7 +56,7 @@ def main():
           f" + global {sizes['global_index']/1e3:.1f} KB")
 
     mesh = make_host_mesh() if args.mesh == "host" else None
-    eng = SpatialEngine(index, mesh=mesh)
+    ex = Executor(index, mesh=mesh)
     rng = np.random.default_rng(args.seed)
     q = args.queries
 
@@ -64,20 +67,28 @@ def main():
     polys, n_edges = ds.random_polygons(max(q // 8, 8), part.bounds,
                                         seed=args.seed)
 
-    def bench(name, fn):
-        fn()                      # compile
+    workload = [
+        ("point", PointQuery(), (qx, qy), q),
+        ("range_count", RangeCount(), (rects,), q),
+        ("range", RangeQuery(), (rects,), q),
+        ("circle", CircleQuery(), (qx, qy,
+                                   np.full(q, 0.01, np.float32)), q),
+        ("knn", Knn(k=args.k), (qx[:64], qy[:64]), 64),
+        ("join", SpatialJoin(), (polys, n_edges), len(n_edges)),
+    ]
+
+    for name, spec, sargs, denom in workload:
+        ex.run(spec, *sargs)      # compile + settle the sticky tier
+        ex.run(spec, *sargs)      # compile the fused steady variant
         t0 = time.perf_counter()
-        out = fn()
+        out = ex.run(spec, *sargs)
         jax.block_until_ready(out)
         dt = time.perf_counter() - t0
         print(f"{name:12s} {dt*1e3:9.2f} ms for batch "
-              f"({dt/q*1e6:8.1f} us/query)")
-        return out
-
-    bench("point", lambda: eng.point_query(qx, qy))
-    bench("range", lambda: eng.range_count(rects))
-    bench("knn", lambda: eng.knn(qx[:64], qy[:64], args.k)[0])
-    bench("join", lambda: eng.join_count(polys, n_edges))
+              f"({dt/denom*1e6:8.1f} us/query)")
+    st = ex.stats()
+    print(f"executor: {st['cache_size']} cached executables, "
+          f"{st['host_syncs']} host syncs total, sticky={st['sticky']}")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,4 @@
 from repro.serve.api import (  # noqa: F401
     make_prefill, make_decode, generate, ServeSession,
 )
+from repro.serve.spatial import SpatialServeSession  # noqa: F401

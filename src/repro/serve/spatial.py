@@ -1,0 +1,67 @@
+"""Spatial query serving: mixed QuerySpec workloads over one Executor.
+
+The serving counterpart of serve/api.py's ServeSession, for the
+paper's decision-analysis scenario: a long-lived process answering
+heterogeneous spatial queries (point lookups, range analytics, kNN,
+zone joins) against one resident learned index. Everything dispatches
+through ``Executor.run`` (DESIGN.md §9), so:
+
+  - steady-state requests with a sticky window hit run ONE fused
+    executable with zero host syncs (no retry chain, no blocking
+    bool(jnp.all(...)) reads on the hot path);
+  - escalations triggered by an unusual request update the shared
+    sticky tier once, and superseded compiled variants are evicted —
+    the compiled-program footprint stays bounded over days of traffic;
+  - ``warmup`` moves cold-start compilation + escalation off the
+    serving path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+from jax.sharding import Mesh
+
+from repro.core.build import LearnedSpatialIndex
+from repro.core.executor import Executor
+from repro.core.plan import EngineConfig, QuerySpec
+
+
+class SpatialServeSession:
+    """Serve mixed spatial query batches from a resident learned index."""
+
+    def __init__(self, index: LearnedSpatialIndex,
+                 mesh: Optional[Mesh] = None, part_axis: str = "data",
+                 config: EngineConfig = EngineConfig()):
+        self.executor = Executor(index, mesh=mesh, part_axis=part_axis,
+                                 config=config)
+
+    def warmup(self, requests: Sequence[Tuple]) -> None:
+        """Run representative requests before traffic arrives.
+
+        The strict pass settles the sticky (cap, cand) tiers; the
+        second, non-strict pass compiles the fused steady-path
+        executables — so the first real request never blocks on XLA
+        compilation.
+        """
+        self.executor.run_batch(requests, strict=True)
+        self.executor.run_batch(requests)
+
+    def submit(self, spec: QuerySpec, *args, strict: bool = False):
+        """One request on the zero-sync steady path (strict=True forces
+        the host-checked escalation loop, e.g. for a known-hard query)."""
+        return self.executor.run(spec, *args, strict=strict)
+
+    def submit_batch(self, requests: Sequence[Tuple],
+                     strict: bool = False) -> list:
+        """A mixed batch of (spec, *args) requests, in order."""
+        return self.executor.run_batch(requests, strict=strict)
+
+    def maintain(self) -> dict:
+        """Re-tune between batches: check the ok flags stashed by
+        recent zero-sync runs and escalate any overflowed sticky tier.
+        Returns the tiers that moved. Call off the hot path."""
+        return self.executor.maintain()
+
+    def stats(self) -> dict:
+        """Executor counters: host_syncs, dispatches, cache_size, sticky."""
+        return self.executor.stats()

@@ -9,10 +9,17 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 import pytest
-from hypothesis import settings
 
-settings.register_profile("fast", max_examples=25, deadline=None)
-settings.load_profile("fast")
+try:                                    # property tests are optional: the
+    from hypothesis import settings     # suite must collect even without
+                                        # the hypothesis wheel
+    settings.register_profile("fast", max_examples=25, deadline=None)
+    settings.load_profile("fast")
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # not installed: skip the
+    HAVE_HYPOTHESIS = False             # property-test files
+    collect_ignore = ["test_compress.py", "test_keys.py",
+                      "test_radix.py", "test_spline.py"]
 
 
 @pytest.fixture(scope="session")

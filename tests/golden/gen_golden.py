@@ -1,0 +1,69 @@
+"""Regenerate the golden parity fixture for the SpatialEngine facade.
+
+Run from the repo root against a KNOWN-GOOD revision (originally the
+pre-plan/executor seed engine) and commit the JSON. The parity suite
+(tests/test_executor_parity.py) replays the same deterministic inputs
+through the current facade and requires bitwise-identical outputs.
+
+    PYTHONPATH=src python tests/golden/gen_golden.py
+"""
+import json
+import os
+
+import numpy as np
+
+
+def build_inputs():
+    from repro.core import build_index, fit
+    from repro.data import spatial as ds
+
+    x, y = ds.make("gaussian", 12000, seed=7)
+    part = fit("kdtree", x, y, 12, seed=0)
+    index = build_index(x, y, part)
+
+    rng = np.random.default_rng(11)
+    ix = rng.integers(0, len(x), 32)
+    qx = np.concatenate([x[ix[:16]],
+                         rng.random(16).astype(np.float32) * 2 - 0.5])
+    qy = np.concatenate([y[ix[:16]],
+                         rng.random(16).astype(np.float32) * 2 - 0.5])
+    rects = ds.random_rects(16, 1e-4, part.bounds, seed=13,
+                            centers=(x, y))
+    cx, cy = x[ix[16:28]], y[ix[16:28]]
+    cr = np.full(12, 0.04, np.float32)
+    polys, ne = ds.random_polygons(8, part.bounds, seed=17)
+    return (x, y, index, dict(qx=qx, qy=qy, rects=rects, cx=cx, cy=cy,
+                              cr=cr, polys=polys, ne=ne))
+
+
+def main():
+    from repro.core import SpatialEngine
+
+    x, y, index, q = build_inputs()
+    eng = SpatialEngine(index)
+    out = {}
+    out["point"] = np.asarray(eng.point_query(q["qx"], q["qy"])).tolist()
+    out["range_count"] = np.asarray(eng.range_count(q["rects"])).tolist()
+    cnt, vids, ok = eng.range_query(q["rects"])
+    out["range_query_cnt"] = np.asarray(cnt).tolist()
+    out["range_query_vids"] = np.asarray(vids).tolist()
+    out["range_query_ok"] = np.asarray(ok).tolist()
+    out["circle_count"] = np.asarray(
+        eng.circle_count(q["cx"], q["cy"], q["cr"])).tolist()
+    d2, vid = eng.knn(q["qx"], q["qy"], 5, mode="pruned")
+    out["knn_d2"] = np.asarray(d2).tolist()
+    out["knn_vid"] = np.asarray(vid).tolist()
+    d2e, vide = eng.knn(q["qx"][:8], q["qy"][:8], 3, mode="exact")
+    out["knn_exact_d2"] = np.asarray(d2e).tolist()
+    out["knn_exact_vid"] = np.asarray(vide).tolist()
+    out["join_count"] = np.asarray(
+        eng.join_count(q["polys"], q["ne"])).tolist()
+
+    path = os.path.join(os.path.dirname(__file__), "spatial_golden.json")
+    with open(path, "w") as f:
+        json.dump(out, f)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

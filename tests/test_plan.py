@@ -1,0 +1,224 @@
+"""Plan/executor layer: cache-key canonicalization, executable-cache
+eviction bound, zero-host-sync steady-state dispatch, and
+escalation-fallback exactness under adversarial skew."""
+import numpy as np
+import pytest
+
+from conftest import range_oracle
+from repro.core import (CircleQuery, EngineConfig, Executor, Knn,
+                        PointQuery, RangeCount, RangeQuery, SpatialJoin,
+                        build_index, fit)
+from repro.data import spatial as ds
+
+
+@pytest.fixture(scope="module")
+def executor(built_index):
+    x, y, part, idx = built_index
+    return x, y, part, Executor(idx)
+
+
+# -- QuerySpec canonicalization ------------------------------------------
+
+def test_spec_equality_and_keys():
+    assert RangeQuery() == RangeQuery(cap=None)
+    assert RangeQuery(cap=np.int64(64)) == RangeQuery(cap=64)
+    assert Knn(k=np.int32(5)) == Knn(k=5)
+    assert hash(Knn(k=5, mode="pruned")) == hash(Knn(k=5))
+    assert Knn(k=5).plan_key() != Knn(k=7).plan_key()
+    assert Knn(k=5).sticky_key() == Knn(k=5, mode="pruned").sticky_key()
+    assert CircleQuery() == CircleQuery(materialize=False)
+    assert CircleQuery(materialize=True).plan_key() != \
+        CircleQuery().plan_key()
+    # every RangeQuery shares one adaptive state, caps included
+    assert RangeQuery(cap=32).sticky_key() == RangeQuery().sticky_key()
+    assert PointQuery() == PointQuery()
+    assert SpatialJoin() == SpatialJoin(mode="windowed")
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        Knn(k=0)
+    with pytest.raises(ValueError):
+        Knn(k=3, mode="approx")
+    with pytest.raises(ValueError):
+        SpatialJoin(mode="hash")
+    with pytest.raises(ValueError):
+        RangeQuery(cap=-4)
+
+
+def test_equal_specs_share_one_executable(executor):
+    x, y, part, ex = executor
+    rects = ds.random_rects(8, 1e-4, part.bounds, seed=1, centers=(x, y))
+    n0 = ex.stats()["cache_size"]
+    ex.run(RangeQuery(), rects, strict=True)
+    n1 = ex.stats()["cache_size"]
+    assert n1 > n0                      # first run compiles
+    # a DIFFERENT but equal spec instance must hit the same executable
+    ex.run(RangeQuery(cap=None), rects, strict=True)
+    ex.run(RangeQuery(), rects, strict=True)
+    assert ex.stats()["cache_size"] == n1
+
+
+def test_run_arg_arity_checked(executor):
+    _, _, _, ex = executor
+    with pytest.raises(TypeError):
+        ex.run(PointQuery(), np.zeros(4, np.float32))
+
+
+# -- zero-host-sync steady state -----------------------------------------
+
+def test_sticky_hit_runs_without_host_sync(built_index):
+    x, y, part, idx = built_index
+    ex = Executor(idx)
+    rects = ds.random_rects(8, 1e-4, part.bounds, seed=2, centers=(x, y))
+    qx, qy = x[:8], y[:8]
+    polys, ne = ds.random_polygons(6, part.bounds, seed=3)
+
+    warm = [(RangeQuery(), rects), (Knn(k=5), qx, qy),
+            (SpatialJoin(), polys, ne), (CircleQuery(), qx, qy,
+                                         np.full(8, 0.03, np.float32))]
+    ex.run_batch(warm)                   # cold: establishes sticky tiers
+    assert ex.host_syncs > 0
+    syncs = ex.host_syncs
+
+    out = ex.run_batch(warm)             # steady: fused, zero host syncs
+    assert ex.host_syncs == syncs
+    # non-adaptive specs never sync either
+    ex.run(PointQuery(), qx, qy)
+    ex.run(RangeCount(), rects)
+    assert ex.host_syncs == syncs
+
+    # ... and the zero-sync results are still exact
+    cnt, _, ok = out[0]
+    assert bool(np.asarray(ok).all())
+    assert (np.asarray(cnt) == range_oracle(x, y, rects)).all()
+    d2 = np.sort(np.asarray(out[1][0]), axis=1)
+    want = np.sort((x[None, :] - qx[:, None]) ** 2 +
+                   (y[None, :] - qy[:, None]) ** 2, axis=1)[:, :5]
+    assert np.allclose(d2, want, rtol=1e-5, atol=1e-10)
+
+
+def test_fused_fallback_stays_exact_on_overflow(built_index):
+    """Zero-sync mode with a sticky cap that's too small: the on-device
+    lax.cond fallback must keep counts exact anyway."""
+    x, y, part, idx = built_index
+    ex = Executor(idx, config=EngineConfig(range_cap=2, range_cand=2))
+    easy = ds.random_rects(8, 1e-6, part.bounds, seed=4, centers=(x, y))
+    hard = ds.random_rects(8, 5e-2, part.bounds, seed=5, centers=(x, y))
+    ex.run(RangeQuery(), easy, strict=True)     # sticky at a small tier
+    syncs = ex.host_syncs
+    cnt, _, ok = ex.run(RangeQuery(), hard)     # overflows the window
+    assert ex.host_syncs == syncs               # still no host sync
+    assert (np.asarray(cnt) == range_oracle(x, y, hard)).all()
+    assert not bool(np.asarray(ok).all())       # materialization flagged
+
+
+# -- escalation + eviction -----------------------------------------------
+
+def test_escalation_exact_on_adversarial_skew():
+    """All candidate windows overflow the initial cap: the shared policy
+    must escalate (or fall back) and still return oracle-exact results."""
+    rng = np.random.default_rng(0)
+    n = 4000
+    # a single dense blob: every partition's learned interval for a rect
+    # over the blob vastly exceeds a cap of 2
+    x = (0.5 + rng.normal(0, 1e-3, n)).astype(np.float32)
+    y = (0.5 + rng.normal(0, 1e-3, n)).astype(np.float32)
+    part = fit("kdtree", x, y, 4, seed=0)
+    idx = build_index(x, y, part)
+    cfg = EngineConfig(range_cap=2, range_cand=1, join_cap=2,
+                       join_cand=1, knn_cap=2, circle_cap=2,
+                       circle_cand=1)
+    ex = Executor(idx, config=cfg)
+
+    rects = np.asarray([[0.49, 0.49, 0.51, 0.51],
+                        [0.0, 0.0, 1.0, 1.0]], np.float32)
+    cnt, vids, ok = ex.run(RangeQuery(), rects, strict=True)
+    assert bool(np.asarray(ok).all())
+    assert (np.asarray(cnt) == range_oracle(x, y, rects)).all()
+    got = set(np.asarray(vids)[1][np.asarray(vids)[1] >= 0])
+    assert got == set(range(n))
+
+    d2, _ = ex.run(Knn(k=7), x[:4], y[:4], strict=True)
+    want = np.sort((x[None, :] - x[:4, None]) ** 2 +
+                   (y[None, :] - y[:4, None]) ** 2, axis=1)[:, :7]
+    assert np.allclose(np.sort(np.asarray(d2), 1), want,
+                       rtol=1e-5, atol=1e-12)
+
+    cx = x[:3]
+    cy = y[:3]
+    r = np.full(3, 0.004, np.float32)
+    got_c = np.asarray(ex.run(CircleQuery(), cx, cy, r, strict=True))
+    want_c = np.array([np.sum((x - a) ** 2 + (y - b) ** 2 <= rr * rr)
+                       for a, b, rr in zip(cx, cy, r)])
+    assert (got_c == want_c).all()
+
+
+def test_maintain_escalates_overflowed_sticky_tier(built_index):
+    """Serving re-tune loop: zero-sync runs stash their ok flags; an
+    off-hot-path maintain() escalates tiers that overflowed, so a
+    workload shift doesn't truncate materialization forever."""
+    x, y, part, idx = built_index
+    ex = Executor(idx, config=EngineConfig(range_cap=2, range_cand=2))
+    easy = ds.random_rects(8, 1e-6, part.bounds, seed=6, centers=(x, y))
+    hard = ds.random_rects(8, 1e-2, part.bounds, seed=7, centers=(x, y))
+    base = RangeQuery().sticky_key()
+    ex.run(RangeQuery(), easy, strict=True)      # small sticky tier
+    tier0 = ex._sticky[base]
+    _, _, ok = ex.run(RangeQuery(), hard)        # zero-sync, overflows
+    assert not bool(np.asarray(ok).all())
+    while ex.maintain():                         # escalate until settled
+        cnt, vids, ok = ex.run(RangeQuery(), hard)
+    assert ex._sticky[base] != tier0
+    assert bool(np.asarray(ok).all())            # window now complete
+    assert (np.asarray(cnt) == range_oracle(x, y, hard)).all()
+    # a clean steady run stashes ok=True; maintain is then a no-op
+    ex.run(RangeQuery(), hard)
+    assert ex.maintain() == {}
+
+
+def test_user_cap_never_moves_the_shared_sticky_tier(built_index):
+    """A one-off RangeQuery(cap=N) must not downgrade the serving tier
+    (which would evict the steady fused executable and churn compiles)."""
+    x, y, part, idx = built_index
+    ex = Executor(idx)
+    base = RangeQuery().sticky_key()
+    rects = ds.random_rects(6, 1e-2, part.bounds, seed=21,
+                            centers=(x, y))
+    ex.run(RangeQuery(), rects, strict=True)     # settle a real tier
+    tier = ex._sticky[base]
+    easy = ds.random_rects(4, 1e-6, part.bounds, seed=22,
+                           centers=(x, y))
+    cnt, _, ok = ex.run(RangeQuery(cap=4), easy, strict=True)
+    assert (np.asarray(cnt) == range_oracle(x, y, easy)).all()
+    assert ex._sticky[base] == tier              # tier untouched
+    assert ("w", tier) in ex.cache_variants(base)  # exec not evicted
+
+
+def test_cache_evicts_superseded_cap_variants(built_index):
+    """Escalation must not leak one compiled program per tier: after the
+    sticky tier settles, at most the sticky + initial tiers remain."""
+    x, y, part, idx = built_index
+    ex = Executor(idx, config=EngineConfig(range_cap=2, range_cand=1))
+    base = RangeQuery().sticky_key()
+    for sel in (1e-6, 1e-4, 1e-3, 1e-2, 1e-1):   # force repeated escalation
+        rects = ds.random_rects(6, sel, part.bounds,
+                                seed=int(sel * 1e7), centers=(x, y))
+        cnt, _, ok = ex.run(RangeQuery(), rects, strict=True)
+        assert bool(np.asarray(ok).all())
+        assert (np.asarray(cnt) == range_oracle(x, y, rects)).all()
+        tiers = {v for _, v in ex.cache_variants(base)}
+        assert len(tiers) <= 2, tiers            # sticky + initial only
+    assert ex._sticky[base] != (2, 1)            # escalation did happen
+
+
+def test_facade_and_run_share_sticky_state(built_index):
+    x, y, part, idx = built_index
+    from repro.core import SpatialEngine
+    eng = SpatialEngine(idx)
+    rects = ds.random_rects(6, 1e-4, part.bounds, seed=9, centers=(x, y))
+    eng.range_query(rects)                       # facade warms sticky
+    syncs = eng.executor.host_syncs
+    cnt, _, _ = eng.run(RangeQuery(), rects)     # plan API: fused path
+    assert eng.executor.host_syncs == syncs
+    assert (np.asarray(cnt) == range_oracle(x, y, rects)).all()
