@@ -31,6 +31,15 @@ from repro.core.plan import (CircleQuery, Knn, PointQuery, RangeCount,
 BENCH_N = int(os.environ.get("BENCH_N", 200_000))
 BENCH_Q = int(os.environ.get("BENCH_Q", 64))
 REPEAT = int(os.environ.get("BENCH_REPEAT", 3))
+# kernel backend for the lilis engines (run.py --backend sets this;
+# baselines are backend-independent by construction)
+BENCH_BACKEND = os.environ.get("BENCH_BACKEND", "auto")
+
+
+def lilis_config():
+    """EngineConfig for benchmark lilis engines (honors --backend)."""
+    from repro.core.plan import EngineConfig
+    return EngineConfig(backend=BENCH_BACKEND)
 
 _rows = []
 

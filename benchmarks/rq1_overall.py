@@ -12,7 +12,7 @@ import numpy as np
 
 from benchmarks.common import (BENCH_N, BENCH_Q, BinSearchEngine,
                                FullScanEngine, GridOnlyEngine, emit,
-                               timeit)
+                               lilis_config, timeit)
 from repro.core import (Executor, Knn, PointQuery, RangeCount,
                         RangeQuery, SpatialJoin, build_index, fit)
 from repro.data import spatial as ds
@@ -22,7 +22,7 @@ def main():
     x, y = ds.make("taxi", BENCH_N, seed=0)
     part = fit("kdtree", x, y, 64, seed=0)
     index = build_index(x, y, part)
-    lilis = Executor(index)
+    lilis = Executor(index, config=lilis_config())
     grid = GridOnlyEngine(index)
     full = FullScanEngine(x, y)
     bins = BinSearchEngine(x, y, index.key_spec)
@@ -72,7 +72,7 @@ def main():
     n2 = 1_000_000
     x2, y2 = ds.make("taxi", n2, seed=0)
     part2 = fit("kdtree", x2, y2, 256, seed=0)
-    ex2 = Executor(build_index(x2, y2, part2))
+    ex2 = Executor(build_index(x2, y2, part2), config=lilis_config())
     full2 = FullScanEngine(x2, y2)
     ix2 = rng.integers(0, n2, BENCH_Q)
     qx2, qy2 = x2[ix2], y2[ix2]

@@ -26,7 +26,14 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode: tiny sizes, all QuerySpecs, "
                          "emit BENCH_quick.json")
+    ap.add_argument("--backend", default=None,
+                    choices=["auto", "xla", "pallas"],
+                    help="kernel backend for the lilis engines "
+                         "(--quick always benchmarks every backend)")
     args = ap.parse_args()
+    if args.backend:
+        # must be set before benchmarks.common is imported
+        os.environ["BENCH_BACKEND"] = args.backend
     picked = MODULES
     if args.quick:
         # must be set before benchmarks.common is imported

@@ -18,6 +18,8 @@ from repro.core.partitioner import Partitioner, fit, STRATEGIES  # noqa: F401
 from repro.core.build import LearnedSpatialIndex, build_index  # noqa: F401
 from repro.core.plan import (  # noqa: F401
     ALL_SPEC_TYPES, CircleQuery, EngineConfig, Knn, PointQuery,
-    QuerySpec, RangeCount, RangeQuery, SpatialJoin)
+    QuerySpec, RangeCount, RangeQuery, SpatialJoin, exec_key)
+from repro.core.backends import (  # noqa: F401
+    BACKENDS, PallasBackend, XlaBackend, resolve_backend)
 from repro.core.executor import Executor  # noqa: F401
 from repro.core.engine import SpatialEngine  # noqa: F401

@@ -77,6 +77,11 @@ class SpatialEngine:
         return self.executor.spec
 
     @property
+    def backend(self):
+        """Resolved kernel backend name ("xla" | "pallas")."""
+        return self.executor.backend.name
+
+    @property
     def density(self):
         return self.executor.density
 

@@ -43,10 +43,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import keys as K
 from repro.core import queries as Q
+from repro.core.backends import resolve_backend
 from repro.core.build import LearnedSpatialIndex
 from repro.core.plan import (CircleQuery, EngineConfig, Knn, PointQuery,
                              QuerySpec, RangeCount, RangeQuery,
-                             SpatialJoin)
+                             SpatialJoin, exec_key)
 from repro.core import local_ops as L
 from repro.core.local_ops import _axes
 
@@ -89,7 +90,13 @@ class Executor:
     """Compiles and runs QuerySpecs against one LearnedSpatialIndex.
 
     mesh=None -> single-device; otherwise partitions are sharded over
-    ``part_axis`` (and query batches optionally over ``query_axis``).
+    ``part_axis``. With ``query_axis`` set, batches of at least
+    ``EngineConfig.query_shard_threshold`` queries additionally shard
+    over that mesh axis (query args padded/unpadded host-side; each
+    query-row subgroup runs the partition collectives independently).
+    Local programs pull their lookup/scan stages from the kernel
+    backend selected by ``EngineConfig.backend`` (core/backends.py:
+    XLA reference or the Pallas TPU kernels).
     """
 
     def __init__(self, index: LearnedSpatialIndex,
@@ -100,6 +107,14 @@ class Executor:
         self.part_axis = part_axis
         self.query_axis = query_axis
         self.cfg = config
+        self.backend = resolve_backend(config.backend)
+        if query_axis is not None:
+            if mesh is None:
+                raise ValueError("query_axis requires a mesh")
+            bad = set(_axes(query_axis)) & set(_axes(part_axis))
+            if bad:
+                raise ValueError(
+                    f"query_axis overlaps part_axis: {sorted(bad)}")
         if mesh is not None:
             shards = int(np.prod([mesh.shape[a] for a in _axes(part_axis)]))
             index = L.pad_partitions(index, shards * config.part_chunk)
@@ -129,20 +144,75 @@ class Executor:
 
     # -- compilation + executable cache ----------------------------------
 
-    def _compile(self, exec_key, make_fn):
-        """jit (and shard_map when meshed) a local program, cached."""
-        if exec_key in self._cache:
-            return self._cache[exec_key]
+    def _key(self, base, tag="x", variant=None, qshard=False):
+        """Canonical cache key (plan.exec_key): backend + qshard aware."""
+        return exec_key(self.backend.name, base, tag, variant,
+                        qshard=qshard)
+
+    def _query_shards(self) -> int:
+        return int(np.prod([self.mesh.shape[a]
+                            for a in _axes(self.query_axis)]))
+
+    def _use_qshard(self, qlen: int) -> bool:
+        """Shard this batch over the query mesh axis? (DESIGN.md §10)"""
+        return (self.mesh is not None and self.query_axis is not None
+                and qlen >= self.cfg.query_shard_threshold)
+
+    def _pad_queries(self, fn):
+        """Pad query args to a query-axis multiple; unpad all outputs.
+
+        Pads by repeating row 0 — a real, resolvable query — so padding
+        can never trip the adaptive ok flags that fused programs stash
+        for maintain(). Every program output leaf carries the query
+        batch as its leading axis, so unpadding is one tree_map.
+        """
+        qsize = self._query_shards()
+
+        def wrapped(parts, bounds, *q):
+            qlen = q[0].shape[0]
+            pad = (-qlen) % qsize
+            if pad:
+                q = tuple(jnp.concatenate(
+                    [a, jnp.repeat(a[:1], pad, axis=0)], axis=0)
+                    for a in q)
+            out = fn(parts, bounds, *q)
+            if pad:
+                out = jax.tree_util.tree_map(lambda a: a[:qlen], out)
+            return out
+
+        return wrapped
+
+    def _compile(self, key, make_fn, qshard: bool = False):
+        """jit (and shard_map when meshed) a local program, cached.
+
+        qshard=True compiles the query-axis-sharded wrapping: query
+        args shard over ``query_axis`` (partitions still shard over
+        ``part_axis``; collectives inside the program stay scoped to the
+        part axes, so each query-row subgroup reduces independently) and
+        outputs come back query-sharded. The host-side pad/unpad rides
+        on the compiled callable.
+        """
+        if key in self._cache:
+            return self._cache[key]
         fn = make_fn()
         if self.mesh is None:
             out = jax.jit(partial(fn, axis=None))
         else:
-            axes = _axes(self.part_axis)
-            in_specs = (P(axes),) + (P(),) * (fn.n_query_args + 1)
-            wrapped = _shard_map_wrap(partial(fn, axis=axes), self.mesh,
-                                      in_specs, P())
+            paxes = _axes(self.part_axis)
+            if qshard:
+                qaxes = _axes(self.query_axis)
+                in_specs = ((P(paxes), P()) +
+                            (P(qaxes),) * fn.n_query_args)
+                out_specs = P(qaxes)
+            else:
+                in_specs = (P(paxes),) + (P(),) * (fn.n_query_args + 1)
+                out_specs = P()
+            wrapped = _shard_map_wrap(partial(fn, axis=paxes), self.mesh,
+                                      in_specs, out_specs)
             out = jax.jit(wrapped)
-        self._cache[exec_key] = out
+            if qshard:
+                out = self._pad_queries(out)
+        self._cache[key] = out
         return out
 
     def _call(self, fn, *args):
@@ -166,25 +236,31 @@ class Executor:
         Escalated ``(cap, cand)`` executables for smaller caps are dead
         weight once a larger sticky tier is established — without this,
         long-running serving leaks one compiled program per escalation
-        step (the seed engine's ``_jits`` bug).
+        step (the seed engine's ``_jits`` bug). Sweeps both the plain
+        and query-sharded wrappings (plan.exec_key layout).
         """
         keep = {self._sticky.get(base), self._initial.get(base)}
         for key in list(self._cache):
-            if (isinstance(key, tuple) and len(key) == 3 and
-                    key[0] == base and key[1] in ("w", "fused") and
-                    key[2] not in keep):
+            if (key[2] == tuple(base) and key[3] in ("w", "fused") and
+                    key[4] not in keep):
                 del self._cache[key]
 
     def cache_variants(self, base) -> list:
         """Cached (tag, (cap, cand)) window variants for one sticky key."""
-        return sorted((k[1], k[2]) for k in self._cache
-                      if isinstance(k, tuple) and len(k) == 3 and
-                      k[0] == base and k[1] in ("w", "fused"))
+        return sorted((k[3], k[4]) for k in self._cache
+                      if k[2] == tuple(base) and k[3] in ("w", "fused"))
+
+    def cache_keys(self) -> list:
+        """All executable-cache keys (plan.exec_key layout) — used by
+        tests/tools to assert backend and query-shard compilation."""
+        return list(self._cache)
 
     def stats(self) -> dict:
         return {"host_syncs": self.host_syncs,
                 "dispatches": self.dispatches,
                 "cache_size": len(self._cache),
+                "backend": self.backend.name,
+                "qshard_executables": sum(1 for k in self._cache if k[1]),
                 "sticky": dict(self._sticky)}
 
     def maintain(self) -> dict:
@@ -258,20 +334,23 @@ class Executor:
         self._initial.setdefault(op.base, op.initial)
         self._escalators[op.base] = op.escalate
         sticky = self._sticky.get(op.base)
+        qs = self._use_qshard(pargs[0].shape[0])
         if (sticky is not None and not strict and op.fused is not None
                 and start is None):
             # steady state: fused windowed+fallback program, no host
             # sync; the ok flags are stashed (not read) so maintain()
             # can re-tune the sticky tier off the hot path
-            fn = self._compile((op.base, "fused", sticky),
-                               lambda: op.fused(*sticky))
+            fn = self._compile(self._key(op.base, "fused", sticky,
+                                         qshard=qs),
+                               lambda: op.fused(*sticky), qshard=qs)
             out, ok = self._call(fn, *pargs)
             self._pending[op.base] = (sticky, ok)
             return op.post(out)
         cap, cand = start or sticky or op.initial
         while True:
-            fn = self._compile((op.base, "w", (cap, cand)),
-                               lambda: op.window(cap, cand))
+            fn = self._compile(self._key(op.base, "w", (cap, cand),
+                                         qshard=qs),
+                               lambda: op.window(cap, cand), qshard=qs)
             res = self._call(fn, *pargs)
             hit = self._all_ok(op.get_ok(res))
             maxed = op.maxed(cap, cand)
@@ -305,28 +384,34 @@ class Executor:
         qx = jnp.asarray(args[0], jnp.float32)
         qy = jnp.asarray(args[1], jnp.float32)
         qk = self._qkeys(qx, qy)
-        fn = self._compile(("point",),
-                           lambda: L._PointLocal(self.index, self.cfg))
+        qs = self._use_qshard(qx.shape[0])
+        fn = self._compile(self._key(("point",), qshard=qs),
+                           lambda: L._PointLocal(self.index, self.cfg,
+                                                 self.backend),
+                           qshard=qs)
         return self._call(fn, qx, qy, qk) > 0
 
     def _run_range_count(self, args):
         rects = jnp.asarray(args[0], jnp.float32)
         klo, khi = self._rect_keys(rects)
-        fn = self._compile(("range_count",),
+        qs = self._use_qshard(rects.shape[0])
+        fn = self._compile(self._key(("range_count",), qshard=qs),
                            lambda: L._RangeCountLocal(self.index,
-                                                      self.cfg))
+                                                      self.cfg,
+                                                      self.backend),
+                           qshard=qs)
         return self._call(fn, rects, klo, khi)
 
     def _op_range(self, base):
-        idx, cfg = self.index, self.cfg
+        idx, cfg, bk = self.index, self.cfg, self.backend
 
         def fused(cap, cand):
             # counts stay exact via the on-device full-refine fallback;
             # ok still flags per-query materialization completeness
             return L._CondFusedLocal(
-                idx, cfg,
-                primary=L._RangeWindowLocal(idx, cfg, cap, cand),
-                fallback=L._RangeCountLocal(idx, cfg),
+                idx, cfg, bk,
+                primary=L._RangeWindowLocal(idx, cfg, bk, cap, cand),
+                fallback=L._RangeCountLocal(idx, cfg, bk),
                 fb_args=(0, 1, 2),
                 get_ok=lambda pri: pri[2],
                 merge_ok=lambda pri: pri,
@@ -334,8 +419,8 @@ class Executor:
 
         return _AdaptiveOp(
             base=base, initial=(cfg.range_cap, cfg.range_cand),
-            window=lambda cap, cand: L._RangeWindowLocal(idx, cfg, cap,
-                                                         cand),
+            window=lambda cap, cand: L._RangeWindowLocal(idx, cfg, bk,
+                                                         cap, cand),
             get_ok=lambda res: res[2], finalize=lambda res: res,
             escalate=self._escalate_both, maxed=self._maxed_both,
             sticky_on_maxed=True, fallback=None, fused=fused)
@@ -352,31 +437,34 @@ class Executor:
         return self._adaptive(op, (rects, klo, khi), strict, start=start)
 
     def _op_circle(self, base, materialize: bool):
-        idx, cfg = self.index, self.cfg
+        idx, cfg, bk = self.index, self.cfg, self.backend
 
         def window(cap, cand):
-            return L._CircleWindowLocal(idx, cfg, cap, cand, materialize)
+            return L._CircleWindowLocal(idx, cfg, bk, cap, cand,
+                                        materialize)
 
         def fused(cap, cand):
             if materialize:
                 return L._CondFusedLocal(
-                    idx, cfg, primary=window(cap, cand),
-                    fallback=L._CircleCountLocal(idx, cfg),
+                    idx, cfg, bk, primary=window(cap, cand),
+                    fallback=L._CircleCountLocal(idx, cfg, bk),
                     fb_args=(0, 1, 2, 3),
                     get_ok=lambda pri: pri[2],
                     merge_ok=lambda pri: pri,
                     merge_fb=lambda pri, fb: (fb, pri[1], pri[2]))
             return L._CondFusedLocal(
-                idx, cfg, primary=window(cap, cand),
-                fallback=L._CircleCountLocal(idx, cfg),
+                idx, cfg, bk, primary=window(cap, cand),
+                fallback=L._CircleCountLocal(idx, cfg, bk),
                 fb_args=(0, 1, 2, 3),
                 get_ok=lambda pri: pri[1],
                 merge_ok=lambda pri: pri[0],
                 merge_fb=lambda pri, fb: fb)
 
         def fallback(pargs, res):
-            fn = self._compile(("circle_exact",),
-                               lambda: L._CircleCountLocal(idx, cfg))
+            qs = self._use_qshard(pargs[0].shape[0])
+            fn = self._compile(self._key(("circle_exact",), qshard=qs),
+                               lambda: L._CircleCountLocal(idx, cfg, bk),
+                               qshard=qs)
             cnt = self._call(fn, *pargs)
             if materialize:    # exact counts; window ids flagged by ok
                 return cnt, res[1], res[2]
@@ -416,17 +504,20 @@ class Executor:
         r0 = jnp.sqrt(k / (jnp.pi * d0)).astype(jnp.float32)
         return jnp.maximum(r0, r0g)
 
-    def _knn_exact_fn(self, k):
-        return self._compile(("knn_exact", k),
+    def _knn_exact_fn(self, k, qshard: bool = False):
+        return self._compile(self._key(("knn_exact", k), qshard=qshard),
                              lambda: L._KnnExactLocal(self.index,
-                                                      self.cfg, k))
+                                                      self.cfg,
+                                                      self.backend, k),
+                             qshard=qshard)
 
     def _op_knn(self, base, k):
-        idx, cfg = self.index, self.cfg
+        idx, cfg, bk = self.index, self.cfg, self.backend
         cand = cfg.knn_cand
 
         def window(cap, _cand):
-            return L._KnnPrunedLocal(idx, cfg, k, self.spec, cand, cap)
+            return L._KnnPrunedLocal(idx, cfg, bk, k, self.spec, cand,
+                                     cap)
 
         def fused(cap, _cand):
             def merge_fb(pri, fb):
@@ -435,8 +526,9 @@ class Executor:
                         jnp.where(okc, pri[1], fb[1]))
 
             return L._CondFusedLocal(
-                idx, cfg, primary=window(cap, cand),
-                fallback=L._KnnExactLocal(idx, cfg, k), fb_args=(0, 1),
+                idx, cfg, bk, primary=window(cap, cand),
+                fallback=L._KnnExactLocal(idx, cfg, bk, k),
+                fb_args=(0, 1),
                 get_ok=lambda pri: pri[2],
                 merge_ok=lambda pri: (pri[0], pri[1]),
                 merge_fb=merge_fb)
@@ -444,7 +536,9 @@ class Executor:
         def fallback(pargs, res):
             # final fallback for unresolved queries: exact scan
             neg, vid, ok = res
-            nege, vide = self._call(self._knn_exact_fn(k), *pargs[:2])
+            qs = self._use_qshard(pargs[0].shape[0])
+            nege, vide = self._call(self._knn_exact_fn(k, qshard=qs),
+                                    *pargs[:2])
             okc = ok[:, None]
             return (jnp.where(okc, -neg, -nege),
                     jnp.where(okc, vid, vide))
@@ -462,31 +556,38 @@ class Executor:
         qx = jnp.asarray(args[0], jnp.float32)
         qy = jnp.asarray(args[1], jnp.float32)
         if spec.mode == "exact":
-            neg, vid = self._call(self._knn_exact_fn(spec.k), qx, qy)
+            qs = self._use_qshard(qx.shape[0])
+            neg, vid = self._call(self._knn_exact_fn(spec.k, qshard=qs),
+                                  qx, qy)
             return -neg, vid
         r0 = self._knn_r0(qx, qy, spec.k)
         op = self._op_knn(spec.sticky_key(), spec.k)
         return self._adaptive(op, (qx, qy, r0), strict)
 
     def _op_join(self, base):
-        idx, cfg = self.index, self.cfg
+        idx, cfg, bk = self.index, self.cfg, self.backend
 
         def fused(cap, cand):
             return L._CondFusedLocal(
-                idx, cfg, primary=L._JoinLocal(idx, cfg, cap, cand),
-                fallback=L._JoinFullLocal(idx, cfg), fb_args=(0, 1, 2),
+                idx, cfg, bk,
+                primary=L._JoinLocal(idx, cfg, bk, cap, cand),
+                fallback=L._JoinFullLocal(idx, cfg, bk),
+                fb_args=(0, 1, 2),
                 get_ok=lambda pri: pri[1],
                 merge_ok=lambda pri: pri[0],
                 merge_fb=lambda pri, fb: fb)
 
         def fallback(pargs, res):
-            fn = self._compile(("join_full",),
-                               lambda: L._JoinFullLocal(idx, cfg))
+            qs = self._use_qshard(pargs[0].shape[0])
+            fn = self._compile(self._key(("join_full",), qshard=qs),
+                               lambda: L._JoinFullLocal(idx, cfg, bk),
+                               qshard=qs)
             return self._call(fn, *pargs)
 
         return _AdaptiveOp(
             base=base, initial=(cfg.join_cap, cfg.join_cand),
-            window=lambda cap, cand: L._JoinLocal(idx, cfg, cap, cand),
+            window=lambda cap, cand: L._JoinLocal(idx, cfg, bk, cap,
+                                                  cand),
             get_ok=lambda res: res[1], finalize=lambda res: res[0],
             escalate=self._escalate_both, maxed=self._maxed_both,
             sticky_on_maxed=False, fallback=fallback, fused=fused)
@@ -503,9 +604,12 @@ class Executor:
                                 axis=-1)
         pargs = (polys, n_edges, mbr_k)
         if spec.mode == "full":
-            fn = self._compile(("join_full",),
+            qs = self._use_qshard(polys.shape[0])
+            fn = self._compile(self._key(("join_full",), qshard=qs),
                                lambda: L._JoinFullLocal(self.index,
-                                                        self.cfg))
+                                                        self.cfg,
+                                                        self.backend),
+                               qshard=qs)
             return self._call(fn, *pargs)
         op = self._op_join(spec.sticky_key())
         return self._adaptive(op, pargs, strict)

@@ -1,4 +1,4 @@
-"""Per-shard local query programs (paper §3-4, DESIGN.md §2/§9).
+"""Per-shard local query programs (paper §3-4, DESIGN.md §2/§9/§10).
 
 Each class below is a local SPMD program: a callable
 ``fn(parts, bounds, *query_args, axis=...)`` with attribute
@@ -8,7 +8,10 @@ The executor (core/executor.py) owns jit + shard_map wrapping, the
 executable cache, and the adaptive-cap policy; nothing here retries or
 synchronizes with the host.
 
-Merging collectives per query batch:
+Every program is staged lookup -> scan -> merge (DESIGN.md §10): the
+lookup (learned bounds) and scan (per-partition point work) stages come
+from the pluggable kernel backend (core/backends.py — XLA reference or
+the Pallas TPU kernels); the merge stage (collectives) stays here:
 
   point  -> psum (boolean OR as integer sum)
   range  -> psum of counts / all_gather of windowed candidate ids
@@ -91,6 +94,20 @@ def _map_parts(f, parts, chunk: int, init=None):
     return carry
 
 
+def _for_parts(backend, f, xs):
+    """Span f over one chunk's partitions, backend-appropriately.
+
+    The XLA stages vectorize (vmap); a pallas_call is dispatched once
+    per partition row via lax.map — its grid already parallelizes
+    queries x points, and batching rules for kernels are not relied on.
+    ``xs`` is a tuple of per-partition-stacked args; returns stacked
+    outputs either way.
+    """
+    if backend.vectorize:
+        return jax.vmap(f)(*xs)
+    return jax.lax.map(lambda a: f(*a), xs)
+
+
 def _edge_mask(polys, n_edges):
     e = polys.shape[1]
     return (jnp.arange(e)[None, :, None] < n_edges[:, None, None])
@@ -135,9 +152,11 @@ def _keep_window(vids, cnt, cap: int):
 # ---------------------------------------------------------------------------
 
 class _LocalFn:
-    def __init__(self, index: LearnedSpatialIndex, cfg: EngineConfig):
+    def __init__(self, index: LearnedSpatialIndex, cfg: EngineConfig,
+                 backend):
         self.kw = dict(radix_bits=index.radix_bits, probe=index.probe)
         self.cfg = cfg
+        self.backend = backend
         self.p_total = index.num_partitions
         self.n_pad = index.n_pad
         self.spec = index.key_spec
@@ -192,6 +211,7 @@ class _RangeCountLocal(_LocalFn):
     def __call__(self, parts, bounds, rects, klo, khi, *, axis):
         p_loc = parts["count"].shape[0]
         off = self._local_offset(axis, p_loc)
+        bk = self.backend
         overlap = Q.rect_overlaps_box(rects, bounds)      # (Q, P_total)
 
         def chunk_fn(ch, carry):
@@ -201,18 +221,18 @@ class _RangeCountLocal(_LocalFn):
             def one(j, part):
                 act = jax.lax.dynamic_index_in_dim(
                     overlap, base + j, axis=1, keepdims=False)
-                cnt, _ = Q.range_count_partition(
-                    part, rects, klo, khi, active=act, **self.kw)
-                return cnt
+                s, e = bk.bounds(part, klo, khi, **self.kw)   # lookup
+                return bk.range_scan(part, rects, s, e,       # scan
+                                     active=act)
 
-            cnts = jax.vmap(one)(jnp.arange(c), ch)       # (C, Q)
+            cnts = _for_parts(bk, one, (jnp.arange(c), ch))   # (C, Q)
             return {"i": carry["i"] + 1,
                     "acc": carry["acc"] + jnp.sum(cnts, axis=0)}
 
         out = _map_parts(chunk_fn, parts, self.cfg.part_chunk,
                          init={"i": jnp.int32(0),
                                "acc": jnp.zeros(rects.shape[0], jnp.int32)})
-        return _psum(out["acc"], axis)
+        return _psum(out["acc"], axis)                        # merge
 
 
 class _CircleCountLocal(_LocalFn):
@@ -223,6 +243,7 @@ class _CircleCountLocal(_LocalFn):
     def __call__(self, parts, bounds, rects, klo, khi, circ, *, axis):
         p_loc = parts["count"].shape[0]
         off = self._local_offset(axis, p_loc)
+        bk = self.backend
         overlap = Q.rect_overlaps_box(rects, bounds)
 
         def chunk_fn(ch, carry):
@@ -232,21 +253,18 @@ class _CircleCountLocal(_LocalFn):
             def one(j, part):
                 act = jax.lax.dynamic_index_in_dim(
                     overlap, base + j, axis=1, keepdims=False)
-                _, m = Q.range_count_partition(
-                    part, rects, klo, khi, active=act, **self.kw)
-                dx = part["x"][None, :] - circ[:, 0:1]
-                dy = part["y"][None, :] - circ[:, 1:2]
-                inc = (dx * dx + dy * dy) <= circ[:, 2:3] ** 2
-                return jnp.sum((m & inc).astype(jnp.int32), axis=1)
+                s, e = bk.bounds(part, klo, khi, **self.kw)   # lookup
+                return bk.circle_scan(part, rects, s, e, circ,  # scan
+                                      active=act)
 
-            cnts = jax.vmap(one)(jnp.arange(c), ch)
+            cnts = _for_parts(bk, one, (jnp.arange(c), ch))
             return {"i": carry["i"] + 1,
                     "acc": carry["acc"] + jnp.sum(cnts, axis=0)}
 
         out = _map_parts(chunk_fn, parts, self.cfg.part_chunk,
                          init={"i": jnp.int32(0),
                                "acc": jnp.zeros(rects.shape[0], jnp.int32)})
-        return _psum(out["acc"], axis)
+        return _psum(out["acc"], axis)                        # merge
 
 
 class _RangeWindowLocal(_LocalFn):
@@ -258,8 +276,8 @@ class _RangeWindowLocal(_LocalFn):
 
     n_query_args = 3
 
-    def __init__(self, index, cfg, cap, cand):
-        super().__init__(index, cfg)
+    def __init__(self, index, cfg, backend, cap, cand):
+        super().__init__(index, cfg, backend)
         self.cap = min(cap, index.n_pad)
         self.cand = cand
 
@@ -296,8 +314,9 @@ class _CircleWindowLocal(_LocalFn):
 
     n_query_args = 4
 
-    def __init__(self, index, cfg, cap, cand, materialize: bool):
-        super().__init__(index, cfg)
+    def __init__(self, index, cfg, backend, cap, cand,
+                 materialize: bool):
+        super().__init__(index, cfg, backend)
         self.cap = min(cap, index.n_pad)
         self.cand = cand
         self.materialize = materialize
@@ -337,29 +356,27 @@ class _CircleWindowLocal(_LocalFn):
 class _KnnExactLocal(_LocalFn):
     n_query_args = 2
 
-    def __init__(self, index, cfg, k):
-        super().__init__(index, cfg)
+    def __init__(self, index, cfg, backend, k):
+        super().__init__(index, cfg, backend)
         self.k = k
 
     def __call__(self, parts, bounds, qx, qy, *, axis):
         qn = qx.shape[0]
         k = self.k
+        bk = self.backend
 
         def chunk_fn(ch, carry):
             def one(part):
-                dx = part["x"][None, :] - qx[:, None]
-                dy = part["y"][None, :] - qy[:, None]
-                valid = jnp.arange(self.n_pad)[None, :] < part["count"]
-                d2 = jnp.where(valid, dx * dx + dy * dy, 3e38)
-                return -d2, jnp.broadcast_to(part["vid"][None, :],
-                                             d2.shape)
+                # scan stage: (Q, W) per-partition candidates — W is the
+                # full row for xla, the kernel's top-k for pallas
+                return bk.knn_scan(part, qx, qy, k)
 
-            neg, vid = jax.vmap(one)(ch)                   # (C, Q, n_pad)
+            neg, vid = _for_parts(bk, one, (ch,))          # (C, Q, W)
             neg = jnp.swapaxes(neg, 0, 1).reshape(qn, -1)
             vid = jnp.swapaxes(vid, 0, 1).reshape(qn, -1)
             cand_n = jnp.concatenate([carry[0], neg], axis=1)
             cand_v = jnp.concatenate([carry[1], vid], axis=1)
-            best_n, ix = jax.lax.top_k(cand_n, k)
+            best_n, ix = jax.lax.top_k(cand_n, k)          # merge
             best_v = jnp.take_along_axis(cand_v, ix, axis=1)
             return best_n, best_v
 
@@ -383,8 +400,8 @@ class _KnnPrunedLocal(_LocalFn):
 
     n_query_args = 3
 
-    def __init__(self, index, cfg, k, spec, cand, cap):
-        super().__init__(index, cfg)
+    def __init__(self, index, cfg, backend, k, spec, cand, cap):
+        super().__init__(index, cfg, backend)
         self.k = k
         self.spec2 = spec
         self.cand = cand
@@ -463,8 +480,8 @@ class _JoinLocal(_LocalFn):
 
     n_query_args = 3
 
-    def __init__(self, index, cfg, cap, cand):
-        super().__init__(index, cfg)
+    def __init__(self, index, cfg, backend, cap, cand):
+        super().__init__(index, cfg, backend)
         self.cap = min(cap, index.n_pad)
         self.cand = cand
 
@@ -507,6 +524,7 @@ class _JoinFullLocal(_LocalFn):
         pg = polys.shape[0]
         p_loc = parts["count"].shape[0]
         off = self._local_offset(axis, p_loc)
+        bk = self.backend
         mbrs, klo, khi = mbr_k[:, :4], mbr_k[:, 4], mbr_k[:, 5]
         overlap = Q.rect_overlaps_box(mbrs, bounds)
 
@@ -517,24 +535,18 @@ class _JoinFullLocal(_LocalFn):
             def one(j, part):
                 act = jax.lax.dynamic_index_in_dim(
                     overlap, base + j, axis=1, keepdims=False)
-                _, m = Q.range_count_partition(
-                    part, mbrs, klo, khi, active=act, **self.kw)  # (PG, n)
+                s, e = bk.bounds(part, klo, khi, **self.kw)   # lookup
+                return bk.join_scan(part, polys, n_edges, mbrs,  # scan
+                                    s, e, active=act)
 
-                def pip(poly, ne, mask):
-                    inside = Q.point_in_polygon(part["x"], part["y"],
-                                                poly, ne)
-                    return jnp.sum((mask & inside).astype(jnp.int32))
-
-                return jax.vmap(pip)(polys, n_edges, m)
-
-            cnts = jax.vmap(one)(jnp.arange(c), ch)       # (C, PG)
+            cnts = _for_parts(bk, one, (jnp.arange(c), ch))   # (C, PG)
             return {"i": carry["i"] + 1,
                     "acc": carry["acc"] + jnp.sum(cnts, axis=0)}
 
         out = _map_parts(chunk_fn, parts, self.cfg.part_chunk,
                          init={"i": jnp.int32(0),
                                "acc": jnp.zeros(pg, jnp.int32)})
-        return _psum(out["acc"], axis)
+        return _psum(out["acc"], axis)                        # merge
 
 
 class _CondFusedLocal(_LocalFn):
@@ -555,9 +567,9 @@ class _CondFusedLocal(_LocalFn):
     (Executor.maintain) without syncing on the dispatch path.
     """
 
-    def __init__(self, index, cfg, primary, fallback, fb_args,
+    def __init__(self, index, cfg, backend, primary, fallback, fb_args,
                  get_ok, merge_ok, merge_fb):
-        super().__init__(index, cfg)
+        super().__init__(index, cfg, backend)
         self.primary = primary
         self.fallback = fallback
         self.fb_args = fb_args

@@ -29,7 +29,8 @@ from typing import Optional, Tuple
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    """Initial window sizes for the adaptive executor (DESIGN.md §7)."""
+    """Initial window sizes for the adaptive executor (DESIGN.md §7)
+    plus the kernel-backend / query-sharding knobs (DESIGN.md §10)."""
     part_chunk: int = 8          # partitions processed per lax.map step
     range_cap: int = 64          # windowed-range candidate cap/partition
     knn_cap: int = 64            # windowed kNN gather cap per partition
@@ -40,6 +41,30 @@ class EngineConfig:
     join_cand: int = 8           # candidate partitions per polygon
     circle_cap: int = 64         # windowed circle candidate cap/partition
     circle_cand: int = 8         # candidate partitions per circle query
+    backend: str = "auto"        # kernel backend: auto | xla | pallas
+    query_shard_threshold: int = 1024   # min batch to shard query axis
+
+
+def exec_key(backend: str, base: Tuple, tag: str = "x",
+             variant: Optional[Tuple] = None,
+             qshard: bool = False) -> Tuple:
+    """Canonical executable-cache key (DESIGN.md §10 cache-key layout).
+
+    ``(backend, qshard, base, tag, variant)``:
+
+      backend   Backend.name — compiled programs are never shared across
+                kernel backends;
+      qshard    True for the query-axis-sharded wrapping of the same
+                program (different in/out shardings -> different
+                executable);
+      base      the spec's sticky/cache base tuple (``sticky_key()`` for
+                adaptive ops, a literal kind tuple otherwise);
+      tag       program flavor within the base: "x" exact/simple,
+                "w" strict windowed tier, "fused" zero-sync steady tier;
+      variant   the (cap, cand) tier for "w"/"fused" programs — the slot
+                the executor's eviction policy sweeps.
+    """
+    return (str(backend), bool(qshard), tuple(base), str(tag), variant)
 
 
 class QuerySpec:

@@ -58,54 +58,62 @@ def build_spline(keys_f32, valid, *, eps: int, m_pad: int):
             knots_p, p, jnp.minimum(cnt, m_pad - 1), 0)
         return knots_k, knots_p, cnt + 1
 
+    # The scan carries ONLY scalars and streams emitted knots out as
+    # per-step ys, compacted into the (m_pad,) arrays by one scatter
+    # afterwards. (Carrying the knot buffers through per-step lax.cond
+    # branches forced an O(m_pad) carry copy per element — an O(N^2)
+    # build that contradicted the paper's one-pass claim and tripped the
+    # build-scaling test on every runner.)
     def step(carry, inp):
-        (kk, kp, lo, hi, px, pp, cnt, knots_k, knots_p, started) = carry
+        kk, kp, lo, hi, px, pp, cnt, started = carry
         x, y, use = inp
+        # corridor slopes vs the current knot (garbage when ~started or
+        # dx == 0; masked out by the selects below)
+        dx = x - kk
+        s_lo = (y - epsf - kp) / dx
+        s_hi = (y + epsf - kp) / dx
+        inside = (s_lo <= hi) & (s_hi >= lo)
+        is_first = use & ~started
+        new_knot = use & started & ~inside
+        tighten = use & started & inside
+        # corridor restarted from the previous point (new_knot case)
+        dx2 = x - px
+        lo2 = (y - epsf - pp) / dx2
+        hi2 = (y + epsf - pp) / dx2
+        kk2 = jnp.where(is_first, x, jnp.where(new_knot, px, kk))
+        kp2 = jnp.where(is_first, y, jnp.where(new_knot, pp, kp))
+        lo_n = jnp.where(is_first, NEG,
+                         jnp.where(new_knot, lo2,
+                                   jnp.where(tighten,
+                                             jnp.maximum(lo, s_lo), lo)))
+        hi_n = jnp.where(is_first, POS,
+                         jnp.where(new_knot, hi2,
+                                   jnp.where(tighten,
+                                             jnp.minimum(hi, s_hi), hi)))
+        emit_f = is_first | new_knot
+        out = (emit_f, jnp.where(is_first, x, px),
+               jnp.where(is_first, y, pp))
+        cnt2 = cnt + emit_f.astype(jnp.int32)
+        carry2 = (kk2, kp2, lo_n, hi_n, jnp.where(use, x, px),
+                  jnp.where(use, y, pp), cnt2, started | use)
+        return carry2, out
 
-        def do(carry):
-            kk, kp, lo, hi, px, pp, cnt, knots_k, knots_p, started = carry
-
-            def first(_):
-                kk2, kp2 = x, y
-                knots_k2, knots_p2, cnt2 = emit(knots_k, knots_p, cnt, x, y)
-                return (kk2, kp2, NEG, POS, x, y, cnt2, knots_k2, knots_p2,
-                        jnp.bool_(True))
-
-            def rest(_):
-                dx = x - kk
-                s_lo = (y - epsf - kp) / dx
-                s_hi = (y + epsf - kp) / dx
-                inside = (s_lo <= hi) & (s_hi >= lo)
-
-                def tighten(_):
-                    return (kk, kp, jnp.maximum(lo, s_lo),
-                            jnp.minimum(hi, s_hi), x, y, cnt,
-                            knots_k, knots_p, started)
-
-                def new_knot(_):
-                    # Previous point becomes a knot; restart corridor from it.
-                    knots_k2, knots_p2, cnt2 = emit(knots_k, knots_p, cnt,
-                                                    px, pp)
-                    dx2 = x - px
-                    lo2 = (y - epsf - pp) / dx2
-                    hi2 = (y + epsf - pp) / dx2
-                    return (px, pp, lo2, hi2, x, y, cnt2,
-                            knots_k2, knots_p2, started)
-
-                return jax.lax.cond(inside, tighten, new_knot, None)
-
-            return jax.lax.cond(started, rest, first, None)
-
-        carry2 = jax.lax.cond(use, do, lambda c: c, carry)
-        return carry2, None
-
-    knots_k0 = jnp.full((m_pad,), POS, jnp.float32)
-    knots_p0 = jnp.zeros((m_pad,), jnp.float32)
     init = (jnp.float32(0), jnp.float32(0), NEG, POS,
             jnp.float32(0), jnp.float32(0), jnp.int32(0),
-            knots_k0, knots_p0, jnp.bool_(False))
-    (kk, kp, lo, hi, px, pp, cnt, knots_k, knots_p, started), _ = (
+            jnp.bool_(False))
+    (kk, kp, lo, hi, px, pp, cnt, started), (emit_f, emit_k, emit_p) = (
         jax.lax.scan(step, init, (keys_f32, pos, first_occ)))
+
+    # Compact the emitted stream into the knot arrays (order-preserving;
+    # entries beyond m_pad clamp to the last slot exactly like the
+    # sequential emit() did — they only occur when overflow is flagged).
+    slot = jnp.minimum(jnp.cumsum(emit_f.astype(jnp.int32)) - 1,
+                       m_pad - 1)
+    slot = jnp.where(emit_f, slot, m_pad)          # dropped by scatter
+    knots_k = jnp.full((m_pad,), POS, jnp.float32).at[slot].set(
+        emit_k, mode="drop")
+    knots_p = jnp.zeros((m_pad,), jnp.float32).at[slot].set(
+        emit_p, mode="drop")
 
     # Close the spline: last seen point becomes the final knot (unless it
     # already is the only knot == first point with cnt==1 and px==kk).

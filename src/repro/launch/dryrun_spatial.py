@@ -60,8 +60,9 @@ def fake_index() -> LearnedSpatialIndex:
     )
 
 
-def run(mesh_kind: str, out_dir: str):
+def run(mesh_kind: str, out_dir: str, backend: str = "xla"):
     import repro.core.local_ops as E
+    from repro.core.backends import resolve_backend
 
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     chips = int(np.prod(list(mesh.shape.values())))
@@ -69,7 +70,8 @@ def run(mesh_kind: str, out_dir: str):
     index = fake_index()
     cfg = EngineConfig(part_chunk=8, range_cap=64, knn_cap=64,
                        range_cand=8, knn_cand=8, join_cap=128,
-                       join_cand=8)
+                       join_cand=8, backend=backend)
+    bk = resolve_backend(backend)
 
     # build the shardable parts dict as SDS (mirror _part_arrays)
     parts = {
@@ -115,24 +117,25 @@ def run(mesh_kind: str, out_dir: str):
         cells[name] = rep
 
     # 1) baseline range: full-refine mask path (partition-centric scan)
-    lower_one("range_mask", E._RangeCountLocal(index, cfg), Q,
+    lower_one("range_mask", E._RangeCountLocal(index, cfg, bk), Q,
               (sd((Q, 4), jnp.float32), sd((Q,), jnp.float32),
                sd((Q,), jnp.float32)))
     # 2) optimized range: query-centric windowed + z-split
     lower_one("range_window",
-              E._RangeWindowLocal(index, cfg, cfg.range_cap,
+              E._RangeWindowLocal(index, cfg, bk, cfg.range_cap,
                                   cfg.range_cand), Q,
               (sd((Q, 4), jnp.float32), sd((Q,), jnp.float32),
                sd((Q,), jnp.float32)))
     # 3) kNN pruned (k=10)
     lower_one("knn10",
-              E._KnnPrunedLocal(index, cfg, 10, index.key_spec,
+              E._KnnPrunedLocal(index, cfg, bk, 10, index.key_spec,
                                 cfg.knn_cand, cfg.knn_cap), Q,
               (sd((Q,), jnp.float32), sd((Q,), jnp.float32),
                sd((Q,), jnp.float32)))
     # 4) join (256 polygons x 16 edges)
     lower_one("join",
-              E._JoinLocal(index, cfg, cfg.join_cap, cfg.join_cand), PG,
+              E._JoinLocal(index, cfg, bk, cfg.join_cap, cfg.join_cand),
+              PG,
               (sd((PG, 16, 2), jnp.float32), sd((PG,), jnp.int32),
                sd((PG, 6), jnp.float32)))
     return cells
@@ -142,6 +145,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="both",
                     choices=["single", "multi", "both"])
+    ap.add_argument("--backend", default="xla",
+                    choices=["auto", "xla", "pallas"],
+                    help="kernel backend to lower (pallas lowers the "
+                         "real kernels when run on TPU)")
     ap.add_argument("--out", default="results/dryrun_spatial")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
@@ -149,7 +156,7 @@ def main():
     for mk in (["single", "multi"] if args.mesh == "both"
                else [args.mesh]):
         try:
-            run(mk, args.out)
+            run(mk, args.out, backend=args.backend)
         except Exception:
             failures += 1
             traceback.print_exc()

@@ -153,10 +153,7 @@ def analyze_compiled(compiled, chips: int, model_flops: float = 0.0):
     from repro.launch import hlo_walk
     text = compiled.as_text()
     walk = hlo_walk.total_cost(text)
-    cost = compiled.cost_analysis()
-    if isinstance(cost, list):
-        cost = cost[0] if cost else {}
-    cost = cost or {}
+    cost = hlo_walk.xla_cost_analysis(compiled) or {}
     mem = {}
     try:
         ma = compiled.memory_analysis()

@@ -368,3 +368,17 @@ def total_cost(text: str) -> dict:
     return {"flops": fl, "hbm_bytes": by, "coll_bytes": co,
             "coll_counts": cn, "weighted_link_bytes": weighted,
             "entry": entry}
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """XLA's own HloCostAnalysis for a compiled executable, normalized.
+
+    jax's ``Compiled.cost_analysis()`` has returned a one-element list
+    of dicts on older versions and a bare dict on newer ones; callers
+    comparing against this walker (which exists because XLA undercounts
+    loop bodies) shouldn't care which jax they run under.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}

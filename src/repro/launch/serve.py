@@ -41,15 +41,19 @@ def run_lm(args):
 def run_spatial(args):
     import numpy as np
 
-    from repro.core import (CircleQuery, Knn, PointQuery, RangeCount,
-                            RangeQuery, SpatialJoin, build_index, fit)
+    from repro.core import (CircleQuery, EngineConfig, Knn, PointQuery,
+                            RangeCount, RangeQuery, SpatialJoin,
+                            build_index, fit)
     from repro.data import spatial as ds
     from repro.serve import SpatialServeSession
 
     print(f"building index over {args.n} points ...")
     x, y = ds.make("taxi", args.n, seed=0)
     part = fit("kdtree", x, y, 64, seed=0)
-    session = SpatialServeSession(build_index(x, y, part))
+    session = SpatialServeSession(
+        build_index(x, y, part),
+        config=EngineConfig(backend=args.backend))
+    print(f"backend={session.stats()['backend']}")
 
     rng = np.random.default_rng(1)
     q = args.batch
@@ -101,6 +105,9 @@ def main():
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--n", type=int, default=200_000)
     ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "xla", "pallas"],
+                    help="spatial kernel backend (auto: pallas on TPU)")
     args = ap.parse_args()
     if args.spatial:
         if args.batch is None:

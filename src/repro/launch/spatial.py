@@ -17,9 +17,9 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (CircleQuery, Executor, Knn, PointQuery,
-                        RangeCount, RangeQuery, SpatialJoin, build_index,
-                        fit)
+from repro.core import (BACKENDS, CircleQuery, EngineConfig, Executor,
+                        Knn, PointQuery, RangeCount, RangeQuery,
+                        SpatialJoin, build_index, fit)
 from repro.data import spatial as ds
 from repro.launch.mesh import make_host_mesh
 
@@ -37,6 +37,16 @@ def main():
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--selectivity", type=float, default=1e-5)
     ap.add_argument("--mesh", choices=["none", "host"], default="none")
+    ap.add_argument("--backend", choices=list(BACKENDS), default="auto",
+                    help="kernel backend for the scan stages "
+                         "(auto picks pallas on TPU)")
+    ap.add_argument("--query-shard", action="store_true",
+                    help="with --mesh host: split devices into a "
+                         "(part, query) mesh and shard large query "
+                         "batches over the query axis")
+    ap.add_argument("--query-shard-threshold", type=int, default=None,
+                    help="min batch size to query-shard (default: "
+                         "EngineConfig default)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -55,8 +65,31 @@ def main():
           f"{t_build*1e3:.0f} ms; model {sizes['local_model']/1e3:.1f} KB"
           f" + global {sizes['global_index']/1e3:.1f} KB")
 
-    mesh = make_host_mesh() if args.mesh == "host" else None
-    ex = Executor(index, mesh=mesh)
+    cfg_kw = {"backend": args.backend}
+    if args.query_shard_threshold is not None:
+        cfg_kw["query_shard_threshold"] = args.query_shard_threshold
+    cfg = EngineConfig(**cfg_kw)
+    mesh = None
+    query_axis = None
+    if args.mesh == "host":
+        n_dev = len(jax.devices())
+        if args.query_shard and n_dev >= 2 and n_dev % 2 == 0:
+            q_sz = 2
+            # largest pow2 query axis that still leaves >= half the
+            # devices for the partition axis
+            while n_dev % (q_sz * 2) == 0 and q_sz * 2 <= n_dev // 2:
+                q_sz *= 2
+            mesh = make_host_mesh((n_dev // q_sz, q_sz),
+                                  ("data", "query"))
+            query_axis = "query"
+        else:
+            if args.query_shard:
+                print(f"--query-shard needs an even device count >= 2 "
+                      f"(have {n_dev}); using a partition-only mesh")
+            mesh = make_host_mesh()
+    ex = Executor(index, mesh=mesh, query_axis=query_axis, config=cfg)
+    print(f"backend={ex.backend.name} mesh="
+          f"{dict(mesh.shape) if mesh else None} query_axis={query_axis}")
     rng = np.random.default_rng(args.seed)
     q = args.queries
 

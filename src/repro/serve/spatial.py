@@ -31,9 +31,10 @@ class SpatialServeSession:
 
     def __init__(self, index: LearnedSpatialIndex,
                  mesh: Optional[Mesh] = None, part_axis: str = "data",
+                 query_axis: Optional[str] = None,
                  config: EngineConfig = EngineConfig()):
         self.executor = Executor(index, mesh=mesh, part_axis=part_axis,
-                                 config=config)
+                                 query_axis=query_axis, config=config)
 
     def warmup(self, requests: Sequence[Tuple]) -> None:
         """Run representative requests before traffic arrives.

@@ -1,0 +1,147 @@
+"""Kernel-backend parity (DESIGN.md §10): the xla reference and the
+pallas backend (interpret mode on CPU) must agree BIT-FOR-BIT on every
+query family, pinned against the committed golden fixture — the same
+inputs the facade parity suite replays. Also covers backend resolution
+and the backend-tagged executable-cache keys."""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "golden"))
+from gen_golden import build_inputs  # noqa: E402
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "spatial_golden.json")
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def inputs():
+    x, y, index, q = build_inputs()
+    return x, y, index, q
+
+
+@pytest.fixture(scope="module", params=["xla", "pallas"])
+def backend_ex(request, inputs):
+    from repro.core import EngineConfig, Executor
+    _, _, index, _ = inputs
+    ex = Executor(index, config=EngineConfig(backend=request.param))
+    assert ex.backend.name == request.param
+    return ex
+
+
+# -- resolution ----------------------------------------------------------
+
+def test_backend_resolution():
+    import jax
+    from repro.core import PallasBackend, XlaBackend, resolve_backend
+    assert resolve_backend("xla").name == "xla"
+    assert isinstance(resolve_backend("pallas"), PallasBackend)
+    auto = resolve_backend("auto")
+    if jax.default_backend() == "tpu":
+        assert auto.name == "pallas"
+    else:
+        assert isinstance(auto, XlaBackend)
+    with pytest.raises(ValueError):
+        resolve_backend("cuda")
+
+
+def test_executor_rejects_unknown_backend(inputs):
+    from repro.core import EngineConfig, Executor
+    _, _, index, _ = inputs
+    with pytest.raises(ValueError):
+        Executor(index, config=EngineConfig(backend="cuda"))
+
+
+def test_stats_record_backend(backend_ex):
+    st = backend_ex.stats()
+    assert st["backend"] == backend_ex.backend.name
+
+
+def test_cache_keys_carry_backend(backend_ex, inputs):
+    from repro.core import RangeCount
+    _, _, _, q = inputs
+    backend_ex.run(RangeCount(), q["rects"])
+    keys = backend_ex.cache_keys()
+    assert keys and all(k[0] == backend_ex.backend.name for k in keys)
+    assert all(not k[1] for k in keys)        # no mesh -> never qsharded
+
+
+# -- bit-for-bit parity against the golden fixture -----------------------
+
+def test_point_parity(backend_ex, inputs, golden):
+    from repro.core import PointQuery
+    _, _, _, q = inputs
+    got = np.asarray(backend_ex.run(PointQuery(), q["qx"], q["qy"]))
+    assert got.tolist() == golden["point"]
+
+
+def test_range_count_parity(backend_ex, inputs, golden):
+    from repro.core import RangeCount
+    _, _, _, q = inputs
+    got = np.asarray(backend_ex.run(RangeCount(), q["rects"]))
+    assert got.tolist() == golden["range_count"]
+
+
+def test_range_query_parity(backend_ex, inputs, golden):
+    from repro.core import RangeQuery
+    _, _, _, q = inputs
+    cnt, vids, ok = backend_ex.run(RangeQuery(), q["rects"],
+                                   strict=True)
+    assert np.asarray(cnt).tolist() == golden["range_query_cnt"]
+    assert np.asarray(vids).tolist() == golden["range_query_vids"]
+    assert np.asarray(ok).tolist() == golden["range_query_ok"]
+
+
+def test_circle_count_parity(backend_ex, inputs, golden):
+    from repro.core import CircleQuery
+    _, _, _, q = inputs
+    got = np.asarray(backend_ex.run(CircleQuery(), q["cx"], q["cy"],
+                                    q["cr"], strict=True))
+    assert got.tolist() == golden["circle_count"]
+
+
+def test_knn_parity(backend_ex, inputs, golden):
+    from repro.core import Knn
+    _, _, _, q = inputs
+    d2, vid = backend_ex.run(Knn(k=5), q["qx"], q["qy"], strict=True)
+    assert np.asarray(d2).tolist() == golden["knn_d2"]
+    assert np.asarray(vid).tolist() == golden["knn_vid"]
+    d2e, vide = backend_ex.run(Knn(k=3, mode="exact"), q["qx"][:8],
+                               q["qy"][:8])
+    assert np.asarray(d2e).tolist() == golden["knn_exact_d2"]
+    assert np.asarray(vide).tolist() == golden["knn_exact_vid"]
+
+
+def test_join_parity(backend_ex, inputs, golden):
+    from repro.core import SpatialJoin
+    _, _, _, q = inputs
+    got = np.asarray(backend_ex.run(SpatialJoin(), q["polys"], q["ne"],
+                                    strict=True))
+    assert got.tolist() == golden["join_count"]
+    full = np.asarray(backend_ex.run(SpatialJoin(mode="full"),
+                                     q["polys"], q["ne"]))
+    assert full.tolist() == golden["join_count"]
+
+
+def test_fused_steady_path_parity(backend_ex, inputs, golden):
+    """The zero-sync fused programs embed the backend's full-refine
+    fallback inside lax.cond — counts must stay golden-exact there
+    too (this is the serving hot path the kernels now back)."""
+    from repro.core import RangeQuery, SpatialJoin
+    _, _, _, q = inputs
+    syncs = backend_ex.host_syncs
+    cnt, _, _ = backend_ex.run(RangeQuery(), q["rects"])   # fused
+    assert backend_ex.host_syncs == syncs
+    assert np.asarray(cnt).tolist() == golden["range_query_cnt"]
+    jc = np.asarray(backend_ex.run(SpatialJoin(), q["polys"], q["ne"]))
+    assert backend_ex.host_syncs == syncs
+    assert jc.tolist() == golden["join_count"]

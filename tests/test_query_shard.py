@@ -1,0 +1,91 @@
+"""Query-axis sharding (DESIGN.md §10): a batch above
+EngineConfig.query_shard_threshold must compile a query-sharded
+executable (asserted via the plan.exec_key cache-key layout) and return
+results bitwise-identical to the unsharded path, padding included.
+
+Runs in a SUBPROCESS because XLA device count must be set before jax
+initializes (conftest keeps the main test process at 1 device).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import numpy as np, jax
+from repro.core import *
+from repro.data import spatial as ds
+
+mesh = jax.make_mesh((2, 4), ("data", "query"))
+x, y = ds.make("taxi", 20000, seed=2)
+part = fit("kdtree", x, y, 24)
+idx = build_index(x, y, part)
+
+single = Executor(idx)
+cfg = EngineConfig(query_shard_threshold=16)
+qex = Executor(idx, mesh=mesh, part_axis="data", query_axis="query",
+               config=cfg)
+
+rng = np.random.default_rng(0)
+n_q = 42   # NOT a multiple of the 4-way query axis: exercises padding
+ix = rng.integers(0, len(x), n_q)
+qx, qy = x[ix], y[ix]
+rects = ds.random_rects(n_q, 1e-3, part.bounds, seed=3, centers=(x, y))
+polys, ne = ds.random_polygons(18, part.bounds, seed=5)
+
+# mixed batch through run_batch: every result bitwise == unsharded
+reqs = [(PointQuery(), qx, qy), (RangeCount(), rects),
+        (RangeQuery(), rects), (Knn(k=7), qx, qy),
+        (SpatialJoin(), polys, ne)]
+want = single.run_batch(reqs, strict=True)
+got = qex.run_batch(reqs, strict=True)
+for w, g in zip(want, got):
+    wl = w if isinstance(w, tuple) else (w,)
+    gl = g if isinstance(g, tuple) else (g,)
+    for a, b in zip(wl, gl):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+# cache-key check: the compiled executables are the query-sharded
+# variants (plan.exec_key layout: key[1] is the qshard flag)
+qkeys = [k for k in qex.cache_keys() if k[1]]
+assert qkeys, qex.cache_keys()
+assert qex.stats()["qshard_executables"] == len(qkeys)
+
+# a below-threshold batch compiles (and uses) the UNSHARDED variant
+qex.run(PointQuery(), qx[:8], qy[:8])
+plain = [k for k in qex.cache_keys() if not k[1] and k[2] == ("point",)]
+assert len(plain) == 1
+
+# the fused zero-sync steady path also query-shards, stays exact, and
+# still never syncs with the host
+syncs = qex.host_syncs
+c2, v2, o2 = qex.run(RangeQuery(), rects)
+assert qex.host_syncs == syncs
+assert (np.asarray(c2) == np.asarray(want[2][0])).all()
+assert (np.asarray(v2) == np.asarray(want[2][1])).all()
+
+# validation: a query axis that is also a partition axis is rejected
+try:
+    Executor(idx, mesh=mesh, part_axis="data", query_axis="data")
+    raise SystemExit("expected ValueError")
+except ValueError:
+    pass
+try:
+    Executor(idx, query_axis="query")
+    raise SystemExit("expected ValueError (no mesh)")
+except ValueError:
+    pass
+print("QSHARD-OK")
+"""
+
+
+@pytest.mark.slow
+def test_query_sharded_batches_match_unsharded():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "QSHARD-OK" in out.stdout, out.stdout + out.stderr

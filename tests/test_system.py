@@ -73,25 +73,33 @@ def test_learned_interval_much_smaller_than_partition(system):
 
 def test_build_scales_subquadratically(system):
     """Index build is one sort + one linear pass; doubling N must not
-    quadruple build time (sanity check on the O(N log N + N) claim)."""
+    quadruple the WORK (sanity check on the O(N log N + N) claim).
+
+    Measured as best-of CPU time (``time.process_time`` sums actual
+    compute across threads) rather than wall clock: on a loaded CI
+    runner wall-clock stalls from unrelated processes used to trip the
+    old 6x threshold even though the build did no extra work."""
     import jax
     x, y = ds.make("uniform", 20000, seed=3)
     part = fit("kdtree", x, y, 8, seed=1)
+
     def best_of(n, f):
         ts = []
         for _ in range(n):
-            t0 = time.perf_counter()
+            t0 = time.process_time()
             jax.block_until_ready(f())
-            ts.append(time.perf_counter() - t0)
+            ts.append(time.process_time() - t0)
         return min(ts)
 
     jax.block_until_ready(build_index(x, y, part).key)  # warm caches
-    t1 = best_of(3, lambda: build_index(x, y, part).key)
+    t1 = best_of(5, lambda: build_index(x, y, part).key)
     x2, y2 = ds.make("uniform", 40000, seed=3)
     part2 = fit("kdtree", x2, y2, 8, seed=1)
     jax.block_until_ready(build_index(x2, y2, part2).key)
-    t2 = best_of(3, lambda: build_index(x2, y2, part2).key)
-    assert t2 < 6 * t1, (t1, t2)   # loose: 1-core CI noise
+    t2 = best_of(5, lambda: build_index(x2, y2, part2).key)
+    # 2x the rows: O(N log N) predicts ~2.1x work; quadratic would be
+    # 4x. 3.2x splits those while tolerating constant-overhead noise.
+    assert t2 < 3.2 * max(t1, 1e-3), (t1, t2)
 
 
 def test_index_serializes_through_checkpoint(system, tmp_path):

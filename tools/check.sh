@@ -4,8 +4,12 @@
 #   bash tools/check.sh
 #
 # The quick benchmark exercises every QuerySpec through the unified
-# executor at tiny sizes and writes BENCH_quick.json so perf trajectory
-# can be diffed across PRs.
+# executor on BOTH kernel backends (xla + pallas-interpret) at tiny
+# sizes and writes BENCH_quick.json so perf trajectory can be diffed
+# across PRs; a >25% steady-state regression of the default backend vs
+# the committed BENCH_quick.json fails the check (override the budget
+# with BENCH_REGRESSION_PCT, or skip with SKIP_BENCH_DIFF=1 on runners
+# whose speed is incomparable to the committed baseline's).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,26 +17,57 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 echo "== tier-1 tests =="
-# deselected: known-failing at seed (test_hlo_walk TypeError, moe aux
-# loss tolerance) or timing-flaky on loaded runners (build scaling) —
-# tracked in ROADMAP.md Open items
-python -m pytest -q \
-  --deselect tests/test_hlo_walk.py::test_scan_trip_count_multiplies_flops \
-  --deselect tests/test_moe.py::test_aux_loss_uniformity \
-  --deselect tests/test_system.py::test_build_scales_subquadratically
+# (includes the kernel-backend parity suite, tests/test_backends.py,
+# and the query-axis sharding check, tests/test_query_shard.py)
+python -m pytest -q
 
 echo "== quick benchmark smoke =="
+BASELINE=""
+if git cat-file -e HEAD:BENCH_quick.json 2>/dev/null; then
+  BASELINE="$(mktemp)"
+  git show HEAD:BENCH_quick.json > "$BASELINE"
+fi
 python -m benchmarks.run --quick
 
 echo "== BENCH_quick.json summary =="
-python - <<'EOF'
-import json
+BENCH_BASELINE="$BASELINE" python - <<'EOF'
+import json, os
 rep = json.load(open("BENCH_quick.json"))
-bad = [n for n, s in rep["specs"].items() if s["steady_host_syncs"] > 0]
-for name, s in sorted(rep["specs"].items()):
-    print(f"  {name:12s} cold {s['cold_us_per_q']:9.1f} us/q   "
-          f"steady {s['steady_us_per_q']:9.1f} us/q   "
-          f"syncs {s['steady_host_syncs']}")
+bad = []
+for backend, br in sorted(rep["backends"].items()):
+    for n, s in br["specs"].items():
+        if s["steady_host_syncs"] > 0:
+            bad.append(f"{backend}/{n}")
+for backend, br in sorted(rep["backends"].items()):
+    print(f"  [{backend}]")
+    for name, s in sorted(br["specs"].items()):
+        print(f"  {name:12s} cold {s['cold_us_per_q']:9.1f} us/q   "
+              f"steady {s['steady_us_per_q']:9.1f} us/q   "
+              f"syncs {s['steady_host_syncs']}")
 assert not bad, f"steady-state host syncs detected: {bad}"
-print("OK: all specs zero-sync in steady state")
+print("OK: all specs zero-sync in steady state (every backend)")
+
+# -- perf-trajectory gate: default backend steady us/q vs committed --
+base_path = os.environ.get("BENCH_BASELINE") or ""
+if os.environ.get("SKIP_BENCH_DIFF") == "1" or not base_path:
+    print("perf gate: skipped (no committed baseline)")
+    raise SystemExit(0)
+budget = float(os.environ.get("BENCH_REGRESSION_PCT", "25"))
+base = json.load(open(base_path))
+regressions = []
+for name, s in rep["specs"].items():
+    b = base.get("specs", {}).get(name)
+    if not b:
+        continue
+    old, new = b["steady_us_per_q"], s["steady_us_per_q"]
+    pct = (new - old) / max(old, 1e-9) * 100
+    flag = " <-- REGRESSION" if pct > budget else ""
+    print(f"  gate {name:12s} {old:9.1f} -> {new:9.1f} us/q "
+          f"({pct:+6.1f}%){flag}")
+    if pct > budget:
+        regressions.append((name, old, new, pct))
+assert not regressions, (
+    f"steady-state us/q regressed >{budget}% vs committed "
+    f"BENCH_quick.json: {regressions}")
+print(f"OK: no spec regressed more than {budget}% vs committed baseline")
 EOF
