@@ -1,0 +1,109 @@
+"""Measured crossover for ``EngineConfig.query_shard_threshold``.
+
+``python -m benchmarks.run --crossover`` times the SAME RangeCount
+workload through an unsharded executor and a query-axis-sharded one
+(threshold forced to 1) at a few batch widths, prints the per-batch
+us/q table, and records the recommended threshold — the smallest
+measured batch where the sharded path wins, or above the sweep if it
+never does — into BENCH_quick.json (``crossover`` key, preserved by
+--quick reruns), closing the ROADMAP's "pick the threshold from
+measured crossover" item.
+
+run.py forces a multi-device host platform (XLA_FLAGS) before jax
+initializes; on a machine whose devices are fake host threads the
+sharded path typically loses at every width — a real measurement too:
+it says "keep batches unsharded here", i.e. a threshold above the
+largest production batch.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+BATCHES = (64, 256, 1024, 4096)
+OUT = os.environ.get("BENCH_QUICK_OUT", "BENCH_quick.json")
+
+
+def _steady(ex, spec, args, repeat: int = 3) -> float:
+    import jax
+    jax.block_until_ready(ex.run(spec, *args))
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(ex.run(spec, *args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6 / args[0].shape[0]
+
+
+def main():
+    import jax
+
+    from benchmarks.common import BENCH_N, emit
+    from repro.core import (EngineConfig, Executor, RangeCount,
+                            build_index, fit)
+    from repro.data import spatial as ds
+
+    ndev = jax.device_count()
+    if ndev < 2:
+        raise SystemExit("--crossover needs >= 2 devices (run.py sets "
+                         "XLA_FLAGS for the host platform)")
+    x, y = ds.make("taxi", BENCH_N, seed=0)
+    part = fit("kdtree", x, y, min(16, BENCH_N // 256 or 1), seed=0)
+    index = build_index(x, y, part)
+
+    mesh = jax.make_mesh((1, ndev), ("data", "query"))
+    plain = Executor(index, config=EngineConfig())
+    sharded = Executor(index, mesh=mesh, part_axis="data",
+                       query_axis="query",
+                       config=EngineConfig(query_shard_threshold=1))
+
+    spec = RangeCount()
+    rows = {}
+    wins = {}
+    for q in BATCHES:
+        rects = ds.random_rects(q, 1e-4, part.bounds, seed=q,
+                                centers=(x, y))
+        tu = _steady(plain, spec, (rects,))
+        ts = _steady(sharded, spec, (rects,))
+        rows[q] = {"unsharded_us_per_q": round(tu, 2),
+                   "sharded_us_per_q": round(ts, 2)}
+        emit(f"crossover/q{q}/unsharded", tu)
+        emit(f"crossover/q{q}/sharded", ts)
+        wins[q] = ts < tu
+    # the pick must be noise-robust: recommend the smallest width where
+    # the sharded path wins there AND at every larger swept width (one
+    # lucky small-batch timing must not shard all production traffic)
+    crossed = None
+    for q in sorted(BATCHES, reverse=True):
+        if not wins[q]:
+            break
+        crossed = q
+    # never crossed -> recommend a threshold above the sweep (keep
+    # batches unsharded on this substrate)
+    recommended = crossed if crossed is not None else 2 * max(BATCHES)
+    print(f"# crossover: sharded wins from q={crossed} "
+          f"-> recommended query_shard_threshold={recommended}"
+          if crossed is not None else
+          f"# crossover: sharded never won up to q={max(BATCHES)} "
+          f"-> recommended query_shard_threshold={recommended}")
+
+    record = {"devices": ndev, "batches": rows,
+              "recommended_query_shard_threshold": recommended}
+    report = {}
+    if os.path.exists(OUT):
+        try:
+            with open(OUT) as f:
+                report = json.load(f)
+        except (OSError, ValueError):
+            report = {}
+    report["crossover"] = record
+    with open(OUT, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"# wrote crossover record to {OUT}")
+
+
+if __name__ == "__main__":
+    main()

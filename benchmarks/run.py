@@ -26,6 +26,10 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode: tiny sizes, all QuerySpecs, "
                          "emit BENCH_quick.json")
+    ap.add_argument("--crossover", action="store_true",
+                    help="measure the query_shard_threshold crossover "
+                         "(sharded vs unsharded) and record the pick "
+                         "in BENCH_quick.json")
     ap.add_argument("--backend", default=None,
                     choices=["auto", "xla", "pallas"],
                     help="kernel backend for the lilis engines "
@@ -41,6 +45,15 @@ def main() -> None:
         os.environ.setdefault("BENCH_Q", "16")
         os.environ.setdefault("BENCH_REPEAT", "1")
         picked = ["quick"]
+    elif args.crossover:
+        # multi-device host platform BEFORE jax initializes
+        os.environ.setdefault("BENCH_N", "20000")
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count=2"
+            ).strip()
+        picked = ["crossover"]
     elif args.only:
         pre = args.only.split(",")
         picked = [m for m in MODULES if any(m.startswith(p) for p in pre)]

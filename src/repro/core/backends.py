@@ -23,16 +23,16 @@ A ``Backend`` supplies the lookup + scan stages. Two implementations:
 Dispatch rules (also DESIGN.md §10):
 
   - Only the FULL-REFINE scan programs dispatch to kernels: range/circle
-    exact counts, exact kNN, join refine. They scan whole partitions —
-    exactly the tile shape the kernels implement — and they are the
-    serving fallback half of every fused (windowed + lax.cond) program.
+    exact counts, the point probe, exact kNN, join refine. They scan
+    whole partitions — exactly the tile shape the kernels implement —
+    and they are the serving fallback half of every fused (windowed +
+    lax.cond) program. Circle counts use the fused circle_filter kernel
+    (range filter + distance test in ONE pass); the point probe uses the
+    point_probe kernel (window equality scan after the learned lookup).
   - The windowed fast paths gather <= cap candidates via dynamic slices;
     their work is proportional to the learned interval, not to the
     partition, so there is nothing for a scan kernel to win — they stay
     on the XLA gather path under both backends.
-  - Circle refine and point probe have no dedicated kernel yet; both
-    backends share the reference scan (documented fallthrough, not an
-    error).
   - ``vectorize`` tells the chunk loops how to span partitions: the XLA
     stages vmap cleanly; ``pallas_call`` is dispatched per partition via
     ``lax.map`` (one kernel launch per partition row — the grid already
@@ -111,6 +111,31 @@ class XlaBackend:
         inc = (dx * dx + dy * dy) <= circ[:, 2:3] ** 2
         return jnp.sum((m & inc).astype(jnp.int32), axis=1)
 
+    def point_windows(self, parts, pid, start, probe: int):
+        """Gather each query's (probe,) key/x/y window from ITS
+        candidate partition (query-centric — ``parts`` is the full
+        (P, ...) dict). Shared by both backends: the gather path is
+        dynamic slices, nothing for a partition-resident kernel to
+        win."""
+
+        def win(arr):
+            return jax.vmap(
+                lambda p, s: jax.lax.dynamic_slice(arr, (p, s),
+                                                   (1, probe))[0]
+            )(pid, start)
+
+        return win(parts["keys_f"]), win(parts["x"]), win(parts["y"])
+
+    def point_scan(self, parts, pid, start, qkf, qx, qy, *,
+                   probe: int):
+        """(Q,) exact membership flags: equality probe of the window
+        [start, start+probe) around the learned position in each
+        query's candidate partition (paper Alg. 3 collapsed into one
+        masked window reduction)."""
+        wk, wx, wy = self.point_windows(parts, pid, start, probe)
+        return jnp.any((wk == qkf[:, None]) & (wx == qx[:, None]) &
+                       (wy == qy[:, None]), axis=1)
+
     def knn_scan(self, part, qx, qy, k: int):
         """Per-partition kNN candidates: (neg_d2 (Q, W), vid (Q, W)).
 
@@ -140,9 +165,9 @@ class XlaBackend:
 class PallasBackend(XlaBackend):
     """Scan stages on the Pallas TPU kernels (interpret mode off-TPU).
 
-    Inherits the reference for stages without a dedicated kernel
-    (circle distance refine, filter_mask); overrides the partition-scan
-    stages with kernel dispatches. ``interpret=None`` defers to
+    Every full-refine scan stage has a dedicated kernel now (range,
+    fused circle, point probe, kNN, join refine); only ``filter_mask``
+    remains reference-shared. ``interpret=None`` defers to
     kernels/ops.py (interpret unless running on a real TPU).
     """
 
@@ -159,6 +184,24 @@ class PallasBackend(XlaBackend):
             part["radix_table"], part["keys_f"], part["radix_kmin"],
             part["radix_scale"], part["n_knots"], part["count"],
             probe=probe, radix_bits=radix_bits, interpret=self.interpret)
+
+    def circle_scan(self, part, rects, s, e, circ, active=None):
+        from repro.kernels import ops
+        se = jnp.stack([s, e], axis=1).astype(jnp.float32)
+        cnt = ops.circle_count(rects, se, circ, part["count"],
+                               part["x"], part["y"],
+                               interpret=self.interpret)
+        if active is not None:
+            cnt = jnp.where(active, cnt, 0)
+        return cnt
+
+    def point_scan(self, parts, pid, start, qkf, qx, qy, *,
+                   probe: int):
+        from repro.kernels import ops
+        wk, wx, wy = self.point_windows(parts, pid, start, probe)
+        hits = ops.point_probe(qkf, qx, qy, wk, wx, wy, probe=probe,
+                               interpret=self.interpret)
+        return hits > 0
 
     def range_scan(self, part, rects, s, e, active=None):
         from repro.kernels import ops

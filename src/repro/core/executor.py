@@ -84,6 +84,7 @@ class _AdaptiveOp:
     fallback: Optional[Callable]      # (pargs, raw) -> exact result
     fused: Optional[Callable]         # (cap, cand) -> fused local program
     post: Callable = lambda r: r      # fused/public result adapter
+    demote: Optional[Callable] = None  # (cap, cand) -> lower tier
 
 
 class Executor:
@@ -139,6 +140,10 @@ class Executor:
         self._initial = {}    # sticky_key -> initial-config (cap, cand)
         self._pending = {}    # sticky_key -> (tier, ok device array)
         self._escalators = {}  # sticky_key -> the op's escalate rule
+        self._demoters = {}   # sticky_key -> the op's demote rule
+        self._ok_streak = {}  # sticky_key -> consecutive clean checks
+        self._demoted_from = {}   # sticky_key -> tier last demoted FROM
+        self._demote_backoff = {}  # sticky_key -> streak multiplier
         self.host_syncs = 0   # counted bool(jnp.all(...)) blocking reads
         self.dispatches = 0   # compiled-program launches
 
@@ -228,6 +233,10 @@ class Executor:
         old = self._sticky.get(base)
         self._sticky[base] = variant
         if old != variant:
+            # a new tier starts its demotion clock from zero — clean
+            # checks at the PREVIOUS tier must not count toward
+            # demote_after at this one
+            self._ok_streak[base] = 0
             self._evict(base)
 
     def _evict(self, base):
@@ -265,14 +274,22 @@ class Executor:
 
     def maintain(self) -> dict:
         """Deferred re-tuning: host-check the stashed ok flags of recent
-        zero-sync runs and escalate sticky tiers that overflowed.
+        zero-sync runs; escalate sticky tiers that overflowed and DEMOTE
+        tiers that have been clean for ``EngineConfig.demote_after``
+        consecutive checks (the online re-tune loop in both directions —
+        a hard burst no longer pins a spec at its peak tier forever).
 
         Call OFF the serving hot path (between batches, on a timer).
         Counts stay exact either way — overflowed fused runs already
         fell back on device — but escalating restores complete
         materialization windows and stops paying the fallback cost
-        every request. Returns {sticky_key: new (cap, cand)} for the
-        tiers that moved.
+        every request, while demoting sheds the peak tier's window cost
+        once traffic gets easier. A demotion that immediately bounces
+        back (the next overflow escalates to the tier it left) DOUBLES
+        that base's required clean streak (exponential backoff), so
+        steady-state serving rate-limits ping-pong compiles without
+        ever disabling downward re-tuning for good. Returns
+        {sticky_key: new (cap, cand)} for the tiers that moved.
         """
         moved = {}
         for base, (tier, ok) in list(self._pending.items()):
@@ -280,9 +297,31 @@ class Executor:
             if self._sticky.get(base) != tier:
                 continue   # stale: sticky already moved since the stash
             if self._all_ok(ok):
+                streak = self._ok_streak.get(base, 0) + 1
+                self._ok_streak[base] = streak
+                # the demoted tier survived a clean check: it was a real
+                # demotion, not a bounce — forget the provenance so a
+                # LATER escalation through this tier is not billed as
+                # ping-pong
+                self._demoted_from.pop(base, None)
+                demote = self._demoters.get(base)
+                need = (self.cfg.demote_after *
+                        self._demote_backoff.get(base, 1))
+                if demote is None or streak < need:
+                    continue
+                new = demote(*tier)
+                if new != tier:
+                    self._demoted_from[base] = tier
+                    self._set_sticky(base, new)
+                    moved[base] = new
                 continue
+            self._ok_streak[base] = 0
             new = self._escalators[base](*tier)
             if new != tier:
+                if self._demoted_from.pop(base, None) == new:
+                    # immediate bounce: back off, don't veto forever
+                    self._demote_backoff[base] = \
+                        self._demote_backoff.get(base, 1) * 2
                 self._set_sticky(base, new)
                 moved[base] = new
         return moved
@@ -333,6 +372,7 @@ class Executor:
         """
         self._initial.setdefault(op.base, op.initial)
         self._escalators[op.base] = op.escalate
+        self._demoters[op.base] = op.demote
         sticky = self._sticky.get(op.base)
         qs = self._use_qshard(pargs[0].shape[0])
         if (sticky is not None and not strict and op.fused is not None
@@ -370,6 +410,25 @@ class Executor:
     def _escalate_both(self, cap, cand):
         return (min(cap * 4, self.index.n_pad),
                 min(cand * 2, self.index.num_partitions))
+
+    def _ladder_demote(self, initial, escalate):
+        """Demote to the PREDECESSOR on the op's actual escalation
+        ladder (initial, escalate(initial), ...) rather than a naive
+        cap//4 inverse — when escalation clamped at n_pad /
+        num_partitions the arithmetic inverse lands on off-ladder tiers
+        that were never compiled, and demotion would churn fresh
+        executables instead of reusing warm ones."""
+        def demote(cap, cand):
+            prev = cur = initial
+            for _ in range(64):          # ladders are O(log) long
+                if cur == (cap, cand):
+                    return prev
+                nxt = escalate(*cur)
+                if nxt == cur:
+                    break                # maxed without finding it
+                prev, cur = cur, nxt
+            return (cap, cand)           # off-ladder: stay put
+        return demote
 
     # -- per-kind preparation + drivers ----------------------------------
 
@@ -423,7 +482,9 @@ class Executor:
                                                          cap, cand),
             get_ok=lambda res: res[2], finalize=lambda res: res,
             escalate=self._escalate_both, maxed=self._maxed_both,
-            sticky_on_maxed=True, fallback=None, fused=fused)
+            sticky_on_maxed=True, fallback=None, fused=fused,
+            demote=self._ladder_demote((cfg.range_cap, cfg.range_cand),
+                                       self._escalate_both))
 
     def _run_range(self, spec: RangeQuery, args, strict):
         rects = jnp.asarray(args[0], jnp.float32)
@@ -477,7 +538,9 @@ class Executor:
             finalize=(lambda res: res) if materialize
             else (lambda res: res[0]),
             escalate=self._escalate_both, maxed=self._maxed_both,
-            sticky_on_maxed=False, fallback=fallback, fused=fused)
+            sticky_on_maxed=False, fallback=fallback, fused=fused,
+            demote=self._ladder_demote((cfg.circle_cap, cfg.circle_cand),
+                                       self._escalate_both))
 
     def _run_circle(self, spec: CircleQuery, args, strict):
         cx = jnp.asarray(args[0], jnp.float32)
@@ -550,7 +613,8 @@ class Executor:
             escalate=lambda cap, cd: (min(cap * 4, idx.n_pad), cd),
             maxed=lambda cap, cd: cap >= idx.n_pad,
             sticky_on_maxed=False, fallback=fallback, fused=fused,
-            post=lambda r: (-r[0], r[1]))
+            post=lambda r: (-r[0], r[1]),
+            demote=lambda cap, cd: (max(cap // 4, cfg.knn_cap), cd))
 
     def _run_knn(self, spec: Knn, args, strict):
         qx = jnp.asarray(args[0], jnp.float32)
@@ -590,7 +654,9 @@ class Executor:
                                                   cand),
             get_ok=lambda res: res[1], finalize=lambda res: res[0],
             escalate=self._escalate_both, maxed=self._maxed_both,
-            sticky_on_maxed=False, fallback=fallback, fused=fused)
+            sticky_on_maxed=False, fallback=fallback, fused=fused,
+            demote=self._ladder_demote((cfg.join_cap, cfg.join_cand),
+                                       self._escalate_both))
 
     def _run_join(self, spec: SpatialJoin, args, strict):
         polys = jnp.asarray(args[0], jnp.float32)

@@ -124,11 +124,18 @@ def _psum(x, axis):
 def _top_candidates(flags, c: int):
     """First C true columns per row of (Q, P) flags.
 
+    lax.top_k on a descending column-priority score — O(P*C) instead of
+    the O(P log P) full argsort it replaces; top_k's lowest-index
+    tie-break reproduces the stable sort's layout bitwise (true columns
+    ascending, then false columns ascending).
+
     Returns (pids (Q, C) int32, valid (Q, C), within (Q,) — True when the
     row had <= C candidates, i.e. the result is complete)."""
     qn, p = flags.shape
     c = min(c, p)
-    order = jnp.argsort(~flags, axis=1, stable=True)[:, :c]
+    col = jnp.arange(p, dtype=jnp.int32)
+    score = jnp.where(flags, p - col, 0)
+    _, order = jax.lax.top_k(score, c)
     valid = jnp.take_along_axis(flags, order, axis=1)
     within = jnp.sum(flags.astype(jnp.int32), axis=1) <= c
     return order.astype(jnp.int32), valid, within
@@ -137,14 +144,26 @@ def _top_candidates(flags, c: int):
 def _keep_window(vids, cnt, cap: int):
     """Compact materialized ids to the front, bounded keep width.
 
+    Cumsum stream compaction: the running count of valid ids gives each
+    output slot k its source position (the first index whose cumsum
+    reaches k+1, found by searchsorted on the monotone cumsum row), so
+    the kept window is ONE gather — O(W + keep log W) instead of the
+    O(W log W) full-width argsort this replaces, with the identical
+    (order-preserving) layout. The gather formulation is deliberate:
+    the equivalent scatter (slot per valid id) is scalarized by XLA:CPU
+    and measures ~12x slower at serving widths.
+
     Returns (vids (Q, keep), cap_ok (Q,) — True when no id was dropped).
     """
-    order = jnp.argsort(-(vids >= 0).astype(jnp.int32), axis=1,
-                        stable=True)
-    keep = min(vids.shape[1], max(cap * 8, 256))
-    vids = jnp.take_along_axis(vids, order[:, :keep], axis=1)
-    cap_ok = jnp.sum((vids >= 0).astype(jnp.int32), axis=1) == cnt
-    return vids, cap_ok
+    qn, w = vids.shape
+    keep = min(w, max(cap * 8, 256))
+    cum = jnp.cumsum((vids >= 0).astype(jnp.int32), axis=1)
+    tgt = jnp.arange(1, keep + 1, dtype=jnp.int32)
+    idx = jax.vmap(lambda c: jnp.searchsorted(c, tgt))(cum)
+    kept = jnp.take_along_axis(vids, jnp.minimum(idx, w - 1), axis=1)
+    kept = jnp.where(tgt[None, :] <= cum[:, -1:], kept, -1)
+    cap_ok = jnp.sum((kept >= 0).astype(jnp.int32), axis=1) == cnt
+    return kept, cap_ok
 
 
 # ---------------------------------------------------------------------------
@@ -175,11 +194,22 @@ class _LocalFn:
 
 
 class _PointLocal(_LocalFn):
+    """Staged point probe, query-centric: each query touches only its
+    first-match grid partition and the overflow grid (paper Alg. 1) —
+    never a partition sweep. The lookup is the shared query-centric
+    learned search (Q.lower_bound_at, one knot-row gather per query);
+    the scan is the backend's point_scan stage over the gathered probe
+    windows (the pallas backend reduces the whole batch in ONE
+    point_probe kernel launch)."""
+
     n_query_args = 3
 
     def __call__(self, parts, bounds, qx, qy, qk, *, axis):
         p_loc = parts["count"].shape[0]
         off = self._local_offset(axis, p_loc)
+        bk = self.backend
+        probe = self.kw["probe"]
+        n_pad = parts["keys_f"].shape[1]
         # global filter: first-match grid (paper Alg. 1 semantics) and the
         # overflow grid are the only partitions that can contain the point.
         inb = Q.point_in_box(qx, qy, bounds[:-1])        # (Q, G)
@@ -192,17 +222,14 @@ class _PointLocal(_LocalFn):
             lid = pid - off
             mine = (lid >= 0) & (lid < p_loc)
             lid = jnp.clip(lid, 0, p_loc - 1)
-
-            def one(l, m, kq, ax, ay):
-                part = jax.tree_util.tree_map(lambda a: a[l], parts)
-                f, _ = Q.point_query_partition(
-                    part, kq[None], ax[None], ay[None], **self.kw)
-                return f[0] & m
-
-            return jax.vmap(one)(lid, mine, qk, qx, qy)
+            pos = Q.lower_bound_at(parts, lid, qk, **self.kw)  # lookup
+            start = jnp.clip(pos - probe // 2, 0, n_pad - probe)
+            f = bk.point_scan(parts, lid, start, qk, qx, qy,   # scan
+                              probe=probe)
+            return f & mine
 
         found = probe_pid(pid1) | probe_pid(pid2)
-        return _psum(found.astype(jnp.int32), axis)
+        return _psum(found.astype(jnp.int32), axis)           # merge
 
 
 class _RangeCountLocal(_LocalFn):
@@ -307,10 +334,12 @@ class _RangeWindowLocal(_LocalFn):
 
 
 class _CircleWindowLocal(_LocalFn):
-    """Adaptive windowed circle query: MBR window gather (same phase-1/2
-    shape as _RangeWindowLocal) + distance refine on the gathered
-    candidates. Exact when ok; the executor escalates / falls back to
-    the full-refine _CircleCountLocal otherwise."""
+    """Adaptive windowed circle query: the distance refine (paper
+    Remark 2) is FUSED into the per-subinterval window gather
+    (Q.circle_window_at), so this program receives pre-refined in-circle
+    counts plus compacted ids and never materializes the (Q, C, S*cap)
+    wx/wy coordinate planes. Exact when ok; the executor escalates /
+    falls back to the full-refine _CircleCountLocal otherwise."""
 
     n_query_args = 4
 
@@ -332,23 +361,19 @@ class _CircleWindowLocal(_LocalFn):
         local = pids - off
         mine = valid & (local >= 0) & (local < p_loc)
         local = jnp.clip(local, 0, p_loc - 1)
-        _, vids, ok, wx, wy = Q.range_window_at(
-            parts, boxes, local, mine, rects, self.spec, cap=self.cap,
-            **self.kw)
-        # distance refine (paper Remark 2): the windowed gather covered
-        # the circle's MBR; keep only true in-circle points
-        d2 = ((wx - circ[:, 0, None, None]) ** 2 +
-              (wy - circ[:, 1, None, None]) ** 2)
-        inc = (vids >= 0) & (d2 <= circ[:, 2, None, None] ** 2)
-        cnt = _psum(jnp.sum(inc.astype(jnp.int32), axis=(1, 2)), axis)
+        cnts, vids, ok = Q.circle_window_at(
+            parts, boxes, local, mine, rects, circ, self.spec,
+            cap=self.cap, materialize=self.materialize, **self.kw)
+        cnt = _psum(jnp.sum(cnts, axis=1), axis)
         okq = jnp.all(ok | ~mine, axis=1)
-        vids = jnp.where(inc, vids, -1).reshape(qn, -1)
         if axis is not None:
-            vids = jax.lax.all_gather(vids, axis, axis=1, tiled=True)
             shards = jax.lax.psum(1, axis)
             okq = jax.lax.psum(okq.astype(jnp.int32), axis) == shards
         if not self.materialize:
             return cnt, okq & within
+        vids = vids.reshape(qn, -1)
+        if axis is not None:
+            vids = jax.lax.all_gather(vids, axis, axis=1, tiled=True)
         vids, cap_ok = _keep_window(vids, cnt, self.cap)
         return cnt, vids, okq & within & cap_ok
 
@@ -415,9 +440,12 @@ class _KnnPrunedLocal(_LocalFn):
         p_loc = parts["count"].shape[0]
         off = self._local_offset(axis, p_loc)
         boxd2 = Q.box_min_dist2(qx, qy, bounds)            # (Q, P_total)
-        # C nearest partitions by box distance (static per query batch)
-        order = jnp.argsort(boxd2, axis=1)[:, :cand].astype(jnp.int32)
-        cand_d2 = jnp.take_along_axis(boxd2, order, axis=1)
+        # C nearest partitions by box distance (static per query batch):
+        # lax.top_k on negated distances — O(P*C) vs the full argsort,
+        # identical order (top_k's lowest-index tie-break matches the
+        # stable ascending sort)
+        negd2, order = jax.lax.top_k(-boxd2, cand)
+        cand_d2 = -negd2
         boxes = bounds[order.reshape(-1)].reshape(qn, cand, 4)
         local = order - off
         inshard = (local >= 0) & (local < p_loc)

@@ -43,6 +43,8 @@ class EngineConfig:
     circle_cand: int = 8         # candidate partitions per circle query
     backend: str = "auto"        # kernel backend: auto | xla | pallas
     query_shard_threshold: int = 1024   # min batch to shard query axis
+    demote_after: int = 3        # consecutive clean maintain() checks
+                                 # before a sticky tier steps back down
 
 
 def exec_key(backend: str, base: Tuple, tag: str = "x",

@@ -68,36 +68,9 @@ def learned_bounds(part, klo_f, khi_f, *, radix_bits: int, probe: int):
 
 
 # ---------------------------------------------------------------------------
-# point query (paper Alg. 3)
-# ---------------------------------------------------------------------------
-
-def point_query_partition(part, qkf, qx, qy, *, radix_bits: int, probe: int):
-    """(found (Q,), vid (Q,)) — exact membership within one partition.
-
-    The probe window is sized to contain the ENTIRE duplicate-key run, so
-    the paper's bidirectional scan (Alg. 3 lines 6-19) collapses into one
-    masked window reduction.
-    """
-    n_pad = part["keys_f"].shape[0]
-    pos_hint = learned_lower_bound(part, qkf, radix_bits=radix_bits,
-                                   probe=probe)
-    start = jnp.clip(pos_hint - probe // 2, 0, n_pad - probe)
-
-    def one(s, q, ax, ay):
-        wk = jax.lax.dynamic_slice(part["keys_f"], (s,), (probe,))
-        wx = jax.lax.dynamic_slice(part["x"], (s,), (probe,))
-        wy = jax.lax.dynamic_slice(part["y"], (s,), (probe,))
-        wv = jax.lax.dynamic_slice(part["vid"], (s,), (probe,))
-        m = (wk == q) & (wx == ax) & (wy == ay)
-        found = jnp.any(m)
-        vid = jnp.where(found, wv[jnp.argmax(m)], -1)
-        return found, vid
-
-    return jax.vmap(one)(start, qkf, qx, qy)
-
-
-# ---------------------------------------------------------------------------
 # range query (paper §4.2)
+# (the point query — paper Alg. 3 — lives in the staged pipeline now:
+#  lower_bound_at lookup + Backend.point_scan window-equality probe)
 # ---------------------------------------------------------------------------
 
 def range_count_partition(part, rects, klo_f, khi_f, *, radix_bits: int,
@@ -249,13 +222,15 @@ def bounds_on_rows(parts, pid, qk, *, probe: int):
     return out.reshape(qn, c, t)
 
 
-def range_window_at(parts, bounds, pid, valid, rects, spec, *,
-                    cap: int, radix_bits: int, probe: int,
-                    z_depth: int = 2):
-    """Windowed range query against candidate partitions.
+def _window_intervals(parts, bounds, pid, valid, rects, spec, *,
+                      cap: int, probe: int, z_depth: int):
+    """Shared phase-1.5 of the windowed gathers: clip each query rect to
+    its candidate boxes, z-decompose, and compute the learned [s, e)
+    interval per disjoint subinterval.
 
-    pid, valid: (Q, C); rects: (Q, 4). Returns
-    (counts (Q, C), vids (Q, C, cap), ok (Q, C)).
+    Returns (rect_e (Q, C, 4), s, e, st (Q, C, S), ok (Q, C),
+    act_s (Q, C, S)) — the gather coordinates every windowed variant
+    (plain range, fused circle) consumes.
     """
     qn, c = pid.shape
     n_pad = parts["keys_f"].shape[1]
@@ -282,7 +257,6 @@ def range_window_at(parts, bounds, pid, valid, rects, spec, *,
     sN = zlo.shape[-1]
     klo = K.keys_to_f32(zlo)
     khi = K.keys_to_f32(zhi)
-    pid_s = jnp.broadcast_to(pid[..., None], zlo.shape)
     # gather each candidate's knot/pos row ONCE; all 2S bounds reuse it
     qk2 = jnp.concatenate([klo, khi + 1.0], axis=-1)      # (Q, C, 2S)
     pos2 = bounds_on_rows(parts, pid, qk2, probe=probe)
@@ -291,6 +265,25 @@ def range_window_at(parts, bounds, pid, valid, rects, spec, *,
     e = jnp.where(pv, e, s)
     ok = jnp.all(((e - s) <= cap) | ~pv, axis=-1) | ~nonempty
     st = jnp.clip(s, 0, jnp.maximum(n_pad - cap, 0))
+    act_s = pv & nonempty[..., None]
+    return rect_e, s, e, st, ok, act_s
+
+
+def range_window_at(parts, bounds, pid, valid, rects, spec, *,
+                    cap: int, radix_bits: int, probe: int,
+                    z_depth: int = 2):
+    """Windowed range query against candidate partitions.
+
+    pid, valid: (Q, C); rects: (Q, 4). Returns
+    (counts (Q, C), vids (Q, C, S*cap), ok (Q, C), wx, wy).
+    """
+    del radix_bits
+    qn, c = pid.shape
+    rect_e, s, e, st, ok, act_s = _window_intervals(
+        parts, bounds, pid, valid, rects, spec, cap=cap, probe=probe,
+        z_depth=z_depth)
+    sN = s.shape[-1]
+    pid_s = jnp.broadcast_to(pid[..., None], s.shape)
 
     def gather(p, s0, st_, en, rect, act):
         wx = jax.lax.dynamic_slice(parts["x"], (p, s0), (1, cap))[0]
@@ -305,7 +298,6 @@ def range_window_at(parts, bounds, pid, valid, rects, spec, *,
                 jnp.where(mask, wv, -1), wx, wy)
 
     rect_s = jnp.broadcast_to(rect_e[:, :, None, :], (qn, c, sN, 4))
-    act_s = pv & nonempty[..., None]
     cnts, vids, wx, wy = jax.vmap(gather)(
         pid_s.reshape(-1), st.reshape(-1), s.reshape(-1), e.reshape(-1),
         rect_s.reshape(-1, 4), act_s.reshape(-1))
@@ -313,6 +305,69 @@ def range_window_at(parts, bounds, pid, valid, rects, spec, *,
     return (jnp.sum(cnts.reshape(qn, c, sN), axis=-1),
             vids.reshape(qn, c, sN * cap), ok,
             wx.reshape(qn, c, sN * cap), wy.reshape(qn, c, sN * cap))
+
+
+def circle_window_at(parts, bounds, pid, valid, rects, circ, spec, *,
+                     cap: int, radix_bits: int, probe: int,
+                     z_depth: int = 2, materialize: bool = True):
+    """Fused circle variant of the windowed gather (paper Remark 2).
+
+    The distance refine runs INSIDE the per-subinterval gather, so the
+    caller receives pre-refined in-circle counts (and compacted ids when
+    materializing) and the (Q, C, S*cap) wx/wy coordinate planes are
+    never materialized. ``rects`` is the circle's MBR; ``circ`` is
+    (Q, 3) [cx, cy, r]. Counts are bitwise what the unfused
+    gather-then-refine computed (same f32 distance ops on the same
+    window slices). Returns (counts (Q, C), vids (Q, C, S*cap) | None,
+    ok (Q, C)); vids is None when ``materialize`` is False (the counting
+    path never touches the vid plane at all).
+    """
+    del radix_bits
+    qn, c = pid.shape
+    rect_e, s, e, st, ok, act_s = _window_intervals(
+        parts, bounds, pid, valid, rects, spec, cap=cap, probe=probe,
+        z_depth=z_depth)
+    sN = s.shape[-1]
+    pid_s = jnp.broadcast_to(pid[..., None], s.shape)
+    circ_s = jnp.broadcast_to(circ[:, None, None, :], (qn, c, sN, 3))
+    rect_s = jnp.broadcast_to(rect_e[:, :, None, :], (qn, c, sN, 4))
+
+    def mask_of(p, s0, st_, en, rect, cc, act, wx, wy):
+        posn = s0 + jnp.arange(cap, dtype=jnp.int32)
+        dx = wx - cc[0]
+        dy = wy - cc[1]
+        return ((posn >= st_) & (posn < en) &
+                (posn < parts["count"][p]) &
+                (wx >= rect[0]) & (wx <= rect[2]) &
+                (wy >= rect[1]) & (wy <= rect[3]) & act &
+                (dx * dx + dy * dy <= cc[2] * cc[2]))
+
+    if materialize:
+        def gather(p, s0, st_, en, rect, cc, act):
+            wx = jax.lax.dynamic_slice(parts["x"], (p, s0), (1, cap))[0]
+            wy = jax.lax.dynamic_slice(parts["y"], (p, s0), (1, cap))[0]
+            wv = jax.lax.dynamic_slice(parts["vid"], (p, s0),
+                                       (1, cap))[0]
+            m = mask_of(p, s0, st_, en, rect, cc, act, wx, wy)
+            return jnp.sum(m.astype(jnp.int32)), jnp.where(m, wv, -1)
+
+        cnts, vids = jax.vmap(gather)(
+            pid_s.reshape(-1), st.reshape(-1), s.reshape(-1),
+            e.reshape(-1), rect_s.reshape(-1, 4), circ_s.reshape(-1, 3),
+            act_s.reshape(-1))
+        return (jnp.sum(cnts.reshape(qn, c, sN), axis=-1),
+                vids.reshape(qn, c, sN * cap), ok)
+
+    def gather_cnt(p, s0, st_, en, rect, cc, act):
+        wx = jax.lax.dynamic_slice(parts["x"], (p, s0), (1, cap))[0]
+        wy = jax.lax.dynamic_slice(parts["y"], (p, s0), (1, cap))[0]
+        m = mask_of(p, s0, st_, en, rect, cc, act, wx, wy)
+        return jnp.sum(m.astype(jnp.int32))
+
+    cnts = jax.vmap(gather_cnt)(
+        pid_s.reshape(-1), st.reshape(-1), s.reshape(-1), e.reshape(-1),
+        rect_s.reshape(-1, 4), circ_s.reshape(-1, 3), act_s.reshape(-1))
+    return jnp.sum(cnts.reshape(qn, c, sN), axis=-1), None, ok
 
 
 # ---------------------------------------------------------------------------

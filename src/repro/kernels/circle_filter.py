@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: fused circle refine — masked range filter AND
+distance test in ONE pass.
+
+Grid (query blocks x point blocks), the same accumulation shape as
+range_filter: each step evaluates a (QB, NB) containment mask — learned
+[s, e) interval AND the circle's MBR AND the squared-distance test —
+and accumulates per-query counts into the output block resident in
+VMEM across the inner (point) grid axis. Fusing the distance test into
+the filter pass removes the separate refine sweep (and its second read
+of the x/y planes) that the reference backend performs; the distance
+math is the identical f32 expression, so interpret-mode counts are
+bitwise the reference's.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import iota2
+
+QB = 128
+NB = 512
+
+
+def _kernel(rect_ref, se_ref, circ_ref, cnt_ref, x_ref, y_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    pos = j * NB + iota2((1, NB), 1)                    # global positions
+    count = cnt_ref[0, 0].astype(jnp.int32)
+    s = se_ref[:, 0:1].astype(jnp.int32)                # (QB, 1)
+    e = se_ref[:, 1:2].astype(jnp.int32)
+    x = x_ref[...]                                      # (1, NB)
+    y = y_ref[...]
+    dx = x - circ_ref[:, 0:1]                           # (QB, NB)
+    dy = y - circ_ref[:, 1:2]
+    r = circ_ref[:, 2:3]
+    m = ((pos >= s) & (pos < e) & (pos < count) &
+         (x >= rect_ref[:, 0:1]) & (x <= rect_ref[:, 2:3]) &
+         (y >= rect_ref[:, 1:2]) & (y <= rect_ref[:, 3:4]) &
+         (dx * dx + dy * dy <= r * r))
+    out_ref[...] += jnp.sum(m.astype(jnp.int32), axis=1, keepdims=True)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def circle_count(rects, se, circ, cnt_scalar, x, y, *, interpret: bool):
+    """In-circle counts within learned intervals, one partition.
+
+    rects: (Q, 4) f32 circle MBRs ; se: (Q, 2) f32 learned [s, e)
+    circ: (Q, 3) f32 [cx, cy, r] ; cnt_scalar: (1, 1) f32 valid-count
+    x, y: (N,) f32. Returns (Q,) int32.
+    """
+    nq = rects.shape[0]
+    n = x.shape[0]
+    assert nq % QB == 0 and n % NB == 0
+    grid = (nq // QB, n // NB)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((QB, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((QB, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((QB, 3), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, NB), lambda i, j: (0, j)),
+            pl.BlockSpec((1, NB), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((QB, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nq, 1), jnp.int32),
+        interpret=interpret,
+    )(rects, se, circ, cnt_scalar, x.reshape(1, -1), y.reshape(1, -1))
+    return out.reshape(-1)

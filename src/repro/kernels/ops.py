@@ -11,9 +11,11 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import circle_filter as _cf
 from repro.kernels import knn_topk as _knn
 from repro.kernels import morton as _morton
 from repro.kernels import point_in_polygon as _pip
+from repro.kernels import point_probe as _pp
 from repro.kernels import range_filter as _rf
 from repro.kernels import spline_search as _ss
 from repro.kernels.common import interpret_default, pad_to, cdiv
@@ -64,6 +66,52 @@ def range_count(rects, se, count, x, y, interpret: Optional[bool] = None):
     cnt = jnp.asarray([[np.float32(0)]], jnp.float32).at[0, 0].set(
         jnp.asarray(count, jnp.float32))
     out = _rf.range_count(rects_p, se_p, cnt, x_p, y_p,
+                          interpret=_interp(interpret))
+    return out[:nq]
+
+
+def circle_count(rects, se, circ, count, x, y,
+                 interpret: Optional[bool] = None):
+    """(Q,) in-circle counts within learned [s, e) intervals (fused
+    MBR filter + distance refine in one kernel pass)."""
+    nq = rects.shape[0]
+    n = x.shape[0]
+    qpad = cdiv(nq, _cf.QB) * _cf.QB
+    npad = cdiv(n, _cf.NB) * _cf.NB
+    rects_p = pad_to(jnp.asarray(rects, jnp.float32), qpad, 0, 0.0)
+    se_p = pad_to(jnp.asarray(se, jnp.float32), qpad, 0, 0.0)
+    circ_p = pad_to(jnp.asarray(circ, jnp.float32), qpad, 0, 0.0)
+    x_p = pad_to(jnp.asarray(x, jnp.float32), npad, 0, 3e38)
+    y_p = pad_to(jnp.asarray(y, jnp.float32), npad, 0, 3e38)
+    cnt = jnp.zeros((1, 1), jnp.float32).at[0, 0].set(
+        jnp.asarray(count, jnp.float32))
+    out = _cf.circle_count(rects_p, se_p, circ_p, cnt, x_p, y_p,
+                           interpret=_interp(interpret))
+    return out[:nq]
+
+
+def point_probe(qkf, qx, qy, wk, wx, wy, *, probe: int,
+                interpret: Optional[bool] = None):
+    """(Q,) exact-match counts in each query's gathered probe window
+    (wk/wx/wy: (Q, W >= probe) f32; lanes >= probe are ignored)."""
+    nq = qkf.shape[0]
+    w = wk.shape[1]
+    qpad = cdiv(nq, _pp.QB) * _pp.QB
+    wpad = cdiv(w, 128) * 128
+    q3 = jnp.stack([jnp.asarray(qkf, jnp.float32),
+                    jnp.asarray(qx, jnp.float32),
+                    jnp.asarray(qy, jnp.float32),
+                    jnp.zeros(nq, jnp.float32)], axis=1)
+    q3 = pad_to(q3, qpad, 0, 0.0)
+    # window padding uses -3e38 (query pad rows are 0.0, so padding can
+    # never fabricate a match before the [:nq] slice anyway)
+    wk_p = pad_to(pad_to(jnp.asarray(wk, jnp.float32), wpad, 1, -3e38),
+                  qpad, 0, -3e38)
+    wx_p = pad_to(pad_to(jnp.asarray(wx, jnp.float32), wpad, 1, -3e38),
+                  qpad, 0, -3e38)
+    wy_p = pad_to(pad_to(jnp.asarray(wy, jnp.float32), wpad, 1, -3e38),
+                  qpad, 0, -3e38)
+    out = _pp.point_probe(q3, wk_p, wx_p, wy_p, probe=probe,
                           interpret=_interp(interpret))
     return out[:nq]
 

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: point-probe — window equality scan after the
+learned lookup (paper Alg. 3's bidirectional duplicate-run scan
+collapsed into one masked reduction).
+
+The point query is query-centric: each query probes the <= probe-wide
+window around its learned position in ITS candidate partition, so the
+scan's natural tile is the batch of gathered windows (Q, probe) — not
+a partition plane. The host gathers the per-query key/x/y windows
+(cheap dynamic slices) and the kernel reduces each (QB, probe_pad)
+tile to per-query match counts in one launch per batch. Grid is the
+query axis only; the window axis is VMEM-resident.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import iota2
+
+QB = 128
+
+
+def _kernel(q_ref, wk_ref, wx_ref, wy_ref, out_ref, *, probe: int):
+    lane = iota2((1, wk_ref.shape[1]), 1)
+    m = ((lane < probe) &
+         (wk_ref[...] == q_ref[:, 0:1]) &
+         (wx_ref[...] == q_ref[:, 1:2]) &
+         (wy_ref[...] == q_ref[:, 2:3]))
+    out_ref[...] = jnp.sum(m.astype(jnp.int32), axis=1, keepdims=True)
+
+
+@partial(jax.jit, static_argnames=("probe", "interpret"))
+def point_probe(q3, wk, wx, wy, *, probe: int, interpret: bool):
+    """Exact-match counts in each query's gathered probe window.
+
+    q3: (Q, 4) f32 [key, x, y, pad] ; wk, wx, wy: (Q, W) f32 windows
+    (W >= probe, lanes >= probe are padding). Returns (Q,) int32 match
+    counts (found iff > 0).
+    """
+    nq = q3.shape[0]
+    w = wk.shape[1]
+    assert nq % QB == 0
+    grid = (nq // QB,)
+    out = pl.pallas_call(
+        partial(_kernel, probe=probe),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((QB, 4), lambda i: (i, 0)),
+            pl.BlockSpec((QB, w), lambda i: (i, 0)),
+            pl.BlockSpec((QB, w), lambda i: (i, 0)),
+            pl.BlockSpec((QB, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((QB, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nq, 1), jnp.int32),
+        interpret=interpret,
+    )(q3, wk, wx, wy)
+    return out.reshape(-1)

@@ -1,6 +1,7 @@
 """Pure-jnp oracles for every Pallas kernel (correctness references)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import keys as CK
@@ -40,14 +41,44 @@ def range_count(rects, se, count, x, y):
     return jnp.sum(m.astype(jnp.int32), axis=1)
 
 
+def circle_count(rects, se, circ, count, x, y):
+    """(Q,) exact in-circle counts within [s, e) position intervals
+    (MBR filter + distance refine — the fused kernel's oracle)."""
+    n = x.shape[0]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    s = se[:, 0:1].astype(jnp.int32)
+    e = se[:, 1:2].astype(jnp.int32)
+    dx = x[None, :] - circ[:, 0:1]
+    dy = y[None, :] - circ[:, 1:2]
+    m = ((pos[None, :] >= s) & (pos[None, :] < e) &
+         (pos[None, :] < count) &
+         (x[None, :] >= rects[:, 0:1]) & (x[None, :] <= rects[:, 2:3]) &
+         (y[None, :] >= rects[:, 1:2]) & (y[None, :] <= rects[:, 3:4]) &
+         (dx * dx + dy * dy <= circ[:, 2:3] ** 2))
+    return jnp.sum(m.astype(jnp.int32), axis=1)
+
+
+def point_probe(qkf, qx, qy, wk, wx, wy, *, probe):
+    """(Q,) exact-match counts in gathered (Q, W >= probe) windows."""
+    lane = jnp.arange(wk.shape[1], dtype=jnp.int32)
+    m = ((lane[None, :] < probe) &
+         (wk == qkf[:, None]) &
+         (wx == qx[:, None]) & (wy == qy[:, None]))
+    return jnp.sum(m.astype(jnp.int32), axis=1)
+
+
 def knn_topk(qxy, count, px, py, *, k):
-    """(neg_d2 (Q,k), idx (Q,k)) via full sort."""
+    """(neg_d2 (Q,k), idx (Q,k)) via lax.top_k on negated distances.
+
+    top_k's lowest-index tie-break matches both the stable argsort this
+    replaces and the kernel's max-then-first-hit selection, at O(N*k)
+    instead of O(N log N)."""
     d2 = ((px[None, :] - qxy[:, 0:1]) ** 2 +
           (py[None, :] - qxy[:, 1:2]) ** 2)
     pos = jnp.arange(px.shape[0], dtype=jnp.int32)
     d2 = jnp.where(pos[None, :] < count, d2, 3.0e38)
-    order = jnp.argsort(d2, axis=1)[:, :k]
-    best = jnp.take_along_axis(d2, order, axis=1)
+    negv, order = jax.lax.top_k(-d2, k)
+    best = -negv
     idx = jnp.where(best < 3.0e38, order.astype(jnp.int32), -1)
     return -jnp.where(best < 3.0e38, best, 3.0e38), idx
 

@@ -67,6 +67,59 @@ def test_range_count_kernel_sweep(part_index, nq):
     assert (got == want).all()
 
 
+@pytest.mark.parametrize("nq", [3, 64, 200])
+def test_circle_count_kernel_sweep(part_index, nq):
+    x, y, idx = part_index
+    p = 1
+    rng = np.random.default_rng(nq + 7)
+    ix = rng.integers(0, len(x), nq)
+    cx, cy = x[ix], y[ix]
+    r = rng.uniform(1e-3, 5e-2, nq).astype(np.float32)
+    # query 0: a full-interval circle around a partition point, so the
+    # sweep always exercises at least one in-circle match
+    cx[0], cy[0], r[0] = float(idx.x[p][0]), float(idx.y[p][0]), 0.01
+    rects = jnp.asarray(np.stack([cx - r, cy - r, cx + r, cy + r], 1))
+    circ = jnp.asarray(np.stack([cx, cy, r], 1))
+    n_pad = idx.n_pad
+    s = rng.integers(0, n_pad // 2, nq)
+    e = s + rng.integers(0, n_pad // 2, nq)
+    s[0], e[0] = 0, n_pad
+    se = jnp.asarray(np.stack([s, e], 1), jnp.float32)
+    got = np.asarray(ops.circle_count(rects, se, circ, idx.count[p],
+                                      idx.x[p], idx.y[p]))
+    want = np.asarray(ref.circle_count(rects, se, circ, idx.count[p],
+                                       idx.x[p], idx.y[p]))
+    assert (got == want).all()
+    assert want.sum() > 0      # the sweep actually exercises matches
+
+
+@pytest.mark.parametrize("nq", [2, 40, 150])
+def test_point_probe_kernel_sweep(part_index, nq):
+    x, y, idx = part_index
+    p = 2
+    rng = np.random.default_rng(nq + 3)
+    c = int(idx.count[p])
+    # half real partition points (must be found), half misses
+    pos = rng.integers(0, c, nq)
+    keys_f = np.asarray(CK.keys_to_f32(idx.key[p]))
+    px, py = np.asarray(idx.x[p]), np.asarray(idx.y[p])
+    qx = px[pos].copy()
+    qy = py[pos].copy()
+    qk = keys_f[pos].copy()
+    miss = rng.random(nq) < 0.5
+    qx[miss] += 1.0            # same key, wrong coordinate
+    probe = idx.probe
+    start = np.clip(pos - probe // 2, 0, idx.n_pad - probe)
+    lanes = start[:, None] + np.arange(probe)[None, :]
+    args = (jnp.asarray(qk), jnp.asarray(qx), jnp.asarray(qy),
+            jnp.asarray(keys_f[lanes]), jnp.asarray(px[lanes]),
+            jnp.asarray(py[lanes]))
+    got = np.asarray(ops.point_probe(*args, probe=probe))
+    want = np.asarray(ref.point_probe(*args, probe=probe))
+    assert (got == want).all()
+    assert ((want > 0) == ~miss).all()
+
+
 @pytest.mark.parametrize("k", [1, 8, 16])
 @pytest.mark.parametrize("nq", [4, 130])
 def test_knn_topk_kernel_sweep(part_index, k, nq):

@@ -6,9 +6,10 @@
 # The quick benchmark exercises every QuerySpec through the unified
 # executor on BOTH kernel backends (xla + pallas-interpret) at tiny
 # sizes and writes BENCH_quick.json so perf trajectory can be diffed
-# across PRs; a >25% steady-state regression of the default backend vs
-# the committed BENCH_quick.json fails the check (override the budget
-# with BENCH_REGRESSION_PCT, or skip with SKIP_BENCH_DIFF=1 on runners
+# across PRs; a >25% steady-state regression of EITHER backend vs the
+# committed BENCH_quick.json fails the check, with a per-spec delta
+# table naming the offender (override the budget with
+# BENCH_REGRESSION_PCT, or skip with SKIP_BENCH_DIFF=1 on runners
 # whose speed is incomparable to the committed baseline's).
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -41,33 +42,50 @@ for backend, br in sorted(rep["backends"].items()):
 for backend, br in sorted(rep["backends"].items()):
     print(f"  [{backend}]")
     for name, s in sorted(br["specs"].items()):
+        wide = s.get("steady_us_per_q_b256")
+        wide_s = f"   q256 {wide:9.1f} us/q" if wide is not None else ""
         print(f"  {name:12s} cold {s['cold_us_per_q']:9.1f} us/q   "
               f"steady {s['steady_us_per_q']:9.1f} us/q   "
-              f"syncs {s['steady_host_syncs']}")
+              f"syncs {s['steady_host_syncs']}{wide_s}")
 assert not bad, f"steady-state host syncs detected: {bad}"
 print("OK: all specs zero-sync in steady state (every backend)")
 
-# -- perf-trajectory gate: default backend steady us/q vs committed --
+# -- perf-trajectory gate: BOTH backends' steady us/q vs committed --
+# (per-spec delta table so a regression names the backend AND spec)
 base_path = os.environ.get("BENCH_BASELINE") or ""
 if os.environ.get("SKIP_BENCH_DIFF") == "1" or not base_path:
     print("perf gate: skipped (no committed baseline)")
     raise SystemExit(0)
 budget = float(os.environ.get("BENCH_REGRESSION_PCT", "25"))
 base = json.load(open(base_path))
+base_backends = base.get("backends") or {"_default": base}
 regressions = []
-for name, s in rep["specs"].items():
-    b = base.get("specs", {}).get(name)
-    if not b:
+for backend, br in sorted(rep["backends"].items()):
+    bb = base_backends.get(backend)
+    if bb is None and backend == rep.get("backend_default"):
+        bb = base_backends.get("_default")   # pre-backends baseline
+    if bb is None:
         continue
-    old, new = b["steady_us_per_q"], s["steady_us_per_q"]
-    pct = (new - old) / max(old, 1e-9) * 100
-    flag = " <-- REGRESSION" if pct > budget else ""
-    print(f"  gate {name:12s} {old:9.1f} -> {new:9.1f} us/q "
-          f"({pct:+6.1f}%){flag}")
-    if pct > budget:
-        regressions.append((name, old, new, pct))
+    print(f"  gate [{backend}]")
+    for name, s in sorted(br["specs"].items()):
+        b = bb.get("specs", {}).get(name)
+        if not b:
+            continue
+        for key, label in (("steady_us_per_q", "q16 "),
+                           ("steady_us_per_q_b256", "q256")):
+            if key not in b or key not in s:
+                continue
+            old, new = b[key], s[key]
+            pct = (new - old) / max(old, 1e-9) * 100
+            flag = " <-- REGRESSION" if pct > budget else ""
+            print(f"    {name:12s} {label} {old:9.1f} -> {new:9.1f} "
+                  f"us/q ({pct:+6.1f}%){flag}")
+            if pct > budget:
+                regressions.append((backend, name, label.strip(), old,
+                                    new, round(pct, 1)))
 assert not regressions, (
     f"steady-state us/q regressed >{budget}% vs committed "
     f"BENCH_quick.json: {regressions}")
-print(f"OK: no spec regressed more than {budget}% vs committed baseline")
+print(f"OK: no spec on any backend regressed more than {budget}% "
+      "vs committed baseline")
 EOF
