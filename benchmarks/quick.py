@@ -18,9 +18,10 @@ import jax
 import numpy as np
 
 from benchmarks.common import BENCH_N, BENCH_Q, emit
-from repro.core import (CircleQuery, EngineConfig, Executor, Knn,
-                        PointQuery, RangeCount, RangeQuery, SpatialJoin,
-                        build_index, fit, resolve_backend)
+from repro.core import (CircleQuery, DeleteBatch, EngineConfig, Executor,
+                        InsertBatch, Knn, PointQuery, RangeCount,
+                        RangeQuery, SpatialJoin, build_index, fit,
+                        resolve_backend)
 from repro.data import spatial as ds
 
 OUT = os.environ.get("BENCH_QUICK_OUT", "BENCH_quick.json")
@@ -64,6 +65,61 @@ def bench_backend(index, backend: str, workload, workload256) -> dict:
     executor["sticky"] = {
         str(k): list(v) for k, v in ex.stats()["sticky"].items()}
     return {"specs": specs, "executor": executor}
+
+
+def bench_updates(index, x, y, backend: str, workload) -> dict:
+    """Update-throughput column (DESIGN.md §11): batched inserts/s into
+    the delta buffers, the compaction+re-fit cost, and the post-update
+    steady us/q of the range + circle specs — the regression gate pins
+    that absorbing updates does not tax steady serving. Shares main()'s
+    built index: mutations replace executor state functionally and
+    never touch the original pytree."""
+    ub = 256
+    ex = Executor(index, config=EngineConfig(backend=backend,
+                                             delta_cap=4 * ub))
+    qspecs = {name: (spec, args, denom) for name, spec, args, denom
+              in workload if name in ("range", "circle")}
+    for spec, args, _ in qspecs.values():     # settle sticky + fused
+        jax.block_until_ready(ex.run(spec, *args, strict=True))
+        jax.block_until_ready(ex.run(spec, *args))
+
+    rng = np.random.default_rng(7)
+    bx = np.repeat(x, 2)[: 3 * ub] + rng.normal(0, 1e-4, 3 * ub)
+    by = np.repeat(y, 2)[: 3 * ub] + rng.normal(0, 1e-4, 3 * ub)
+    bx = bx.astype(np.float32)
+    by = by.astype(np.float32)
+    ex.run(InsertBatch(), bx[:ub], by[:ub])   # compile + grow once
+    best = float("inf")
+    for i in (1, 2):
+        t0 = time.perf_counter()
+        ex.run(InsertBatch(), bx[i * ub:(i + 1) * ub],
+               by[i * ub:(i + 1) * ub])
+        best = min(best, time.perf_counter() - t0)
+    insert_us = best * 1e6 / ub
+    ex.run(DeleteBatch(), bx[:32], by[:32])
+
+    t0 = time.perf_counter()
+    touched = ex.refit()
+    jax.block_until_ready(ex.index.key)   # time completion, not dispatch
+    refit_ms = (time.perf_counter() - t0) * 1e3
+
+    out = {"insert_batch": ub,
+           "insert_us_per_op": round(insert_us, 2),
+           "inserts_per_s": round(1e6 / max(insert_us, 1e-9)),
+           "refit_partitions": len(touched),
+           "refit_ms": round(refit_ms, 2)}
+    for name, (spec, args, denom) in qspecs.items():
+        jax.block_until_ready(ex.run(spec, *args))    # recompile settle
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(ex.run(spec, *args))
+            best = min(best, time.perf_counter() - t0)
+        steady = best * 1e6 / denom
+        out[f"post_{name}_us_per_q"] = round(steady, 2)
+        emit(f"quick/{backend}/upd_{name}/steady", steady)
+    emit(f"quick/{backend}/insert/us_per_op", insert_us)
+    return out
 
 
 def main():
@@ -119,6 +175,7 @@ def main():
               "backend_default": default, "backends": {}}
     for backend in order:
         out = bench_backend(index, backend, workload, workload256)
+        out["updates"] = bench_updates(index, x, y, backend, workload)
         report["backends"][backend] = out
     # back-compat view: the default backend is the serving configuration
     # whose trajectory the CI regression gate tracks

@@ -8,6 +8,9 @@ Public API:
   LearnedSpatialIndex          — the index pytree
   QuerySpec family             — declarative query plans (core/plan.py):
     PointQuery, RangeCount, RangeQuery, CircleQuery, Knn, SpatialJoin
+  UpdateSpec family            — declarative mutations (DESIGN.md §11):
+    InsertBatch, DeleteBatch, Refit
+  refit_partitions             — per-partition compaction + spline re-fit
   Executor                     — unified adaptive executor: run(spec, ...)
   SpatialEngine                — method-per-query facade over Executor
 """
@@ -17,8 +20,11 @@ from repro.core.radix import build_radix, radix_locate  # noqa: F401
 from repro.core.partitioner import Partitioner, fit, STRATEGIES  # noqa: F401
 from repro.core.build import LearnedSpatialIndex, build_index  # noqa: F401
 from repro.core.plan import (  # noqa: F401
-    ALL_SPEC_TYPES, CircleQuery, EngineConfig, Knn, PointQuery,
-    QuerySpec, RangeCount, RangeQuery, SpatialJoin, exec_key)
+    ALL_SPEC_TYPES, ALL_UPDATE_TYPES, CircleQuery, DeleteBatch,
+    EngineConfig, InsertBatch, Knn, PointQuery, QuerySpec, RangeCount,
+    RangeQuery, Refit, SpatialJoin, UpdateSpec, exec_key)
+from repro.core.mutate import (  # noqa: F401
+    delta_occupancy, refit_partitions, verify_eps, with_delta_capacity)
 from repro.core.backends import (  # noqa: F401
     BACKENDS, PallasBackend, XlaBackend, resolve_backend)
 from repro.core.executor import Executor  # noqa: F401

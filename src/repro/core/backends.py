@@ -161,6 +161,63 @@ class XlaBackend:
 
         return jax.vmap(pip)(polys, n_edges, m)
 
+    # -- delta stage ------------------------------------------------------
+    # Live delta-buffer probes (DESIGN.md §11). Buffers hold <= d_cap
+    # points per partition, so a full masked scan IS the optimal plan —
+    # like the windowed gathers, there is nothing for a partition-
+    # resident kernel to win, and both backends share this jnp path
+    # (PallasBackend inherits).
+
+    def delta_live(self, part):
+        """(d_cap,) live-slot mask of one partition's delta buffer
+        (the per-row form of queries.gather_delta's liveness rule —
+        change both together)."""
+        slot = jnp.arange(part["dvid"].shape[0], dtype=jnp.int32)
+        return (slot < part["dcount"]) & (part["dvid"] >= 0)
+
+    def delta_scan(self, part, rects, circ=None, active=None):
+        """(Q,) live buffered points in each rect (and circle)."""
+        live = self.delta_live(part)
+        xl, yl, xh, yh = (rects[:, 0:1], rects[:, 1:2], rects[:, 2:3],
+                          rects[:, 3:4])
+        m = (live[None, :] &
+             (part["dx"][None, :] >= xl) & (part["dx"][None, :] <= xh) &
+             (part["dy"][None, :] >= yl) & (part["dy"][None, :] <= yh))
+        if circ is not None:
+            dx = part["dx"][None, :] - circ[:, 0:1]
+            dy = part["dy"][None, :] - circ[:, 1:2]
+            m = m & (dx * dx + dy * dy <= circ[:, 2:3] ** 2)
+        if active is not None:
+            m = m & active[:, None]
+        return jnp.sum(m.astype(jnp.int32), axis=1)
+
+    def delta_join_scan(self, part, polys, n_edges, mbrs, active=None):
+        """(PG,) buffered points contained in each polygon."""
+        live = self.delta_live(part)
+        xl, yl, xh, yh = (mbrs[:, 0:1], mbrs[:, 1:2], mbrs[:, 2:3],
+                          mbrs[:, 3:4])
+        m = (live[None, :] &
+             (part["dx"][None, :] >= xl) & (part["dx"][None, :] <= xh) &
+             (part["dy"][None, :] >= yl) & (part["dy"][None, :] <= yh))
+        if active is not None:
+            m = m & active[:, None]
+
+        def pip(poly, ne, mask):
+            inside = Q.point_in_polygon(part["dx"], part["dy"], poly, ne)
+            return jnp.sum((mask & inside).astype(jnp.int32))
+
+        return jax.vmap(pip)(polys, n_edges, m)
+
+    def delta_knn_scan(self, part, qx, qy):
+        """Buffered kNN candidates: (neg_d2 (Q, d_cap), vid (Q, d_cap))
+        — merged by the program exactly like main-plane candidates."""
+        live = self.delta_live(part)
+        dx = part["dx"][None, :] - qx[:, None]
+        dy = part["dy"][None, :] - qy[:, None]
+        d2 = jnp.where(live[None, :], dx * dx + dy * dy, 3e38)
+        vid = jnp.where(live, part["dvid"], -1)
+        return -d2, jnp.broadcast_to(vid[None, :], d2.shape)
+
 
 class PallasBackend(XlaBackend):
     """Scan stages on the Pallas TPU kernels (interpret mode off-TPU).

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +34,29 @@ PAD_COORD = jnp.float32(3.0e38)
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class LearnedSpatialIndex:
-    """Per-partition learned index arrays (a pytree) + static metadata."""
+    """Per-partition learned index arrays (a pytree) + static metadata.
+
+    The state splits into immutable GEOMETRY (the sorted data plane +
+    the learned model, rebuilt only by ``build_index`` /
+    ``mutate.refit_partitions``) and a per-partition DELTA BUFFER
+    (capacity-padded insert slots + tombstone bookkeeping) that absorbs
+    batched inserts/deletes between re-fits (DESIGN.md §11):
+
+      - deletes keep the sorted ``key`` row intact (the spline stays
+        valid) and tombstone the slot by poisoning its coordinates to
+        ``PAD_COORD`` and its vid to -1 — every coordinate-refine scan
+        then excludes it with NO extra masking, on both kernel
+        backends;
+      - inserts append to the partition's delta slots; query scans
+        probe the (tiny) delta buffer alongside the learned window;
+      - ``mutate.refit_partitions`` merges delta + drops tombstones and
+        re-fits the spline for ONLY the touched partitions.
+
+    ``epoch`` counts applied mutations; ``shape_epoch`` bumps only when
+    a compiled-shape-relevant static changes (delta capacity, n_pad,
+    knot width, probe) — executables cache across epochs and are
+    evicted on shape_epoch changes (executor `_evict_stale`).
+    """
 
     # --- data plane: (P, n_pad), sorted by key within row ---
     key: jax.Array          # uint32, sentinel-padded
@@ -51,12 +73,26 @@ class LearnedSpatialIndex:
     radix_scale: jax.Array  # (P,) f32
     # --- global index: (P, 4) partition boxes (replicated, tiny) ---
     part_bounds: jax.Array  # f32
+    # --- mutable state: delta buffer + tombstone/refit bookkeeping ---
+    delta_key: Optional[jax.Array] = None    # (P, d_cap) uint32
+    delta_x: Optional[jax.Array] = None      # (P, d_cap) f32
+    delta_y: Optional[jax.Array] = None      # (P, d_cap) f32
+    delta_vid: Optional[jax.Array] = None    # (P, d_cap) int32, -1 dead
+    delta_count: Optional[jax.Array] = None  # (P,) int32 used slots
+    dead: Optional[jax.Array] = None         # (P,) int32 tombstoned rows
+    max_run: Optional[jax.Array] = None      # (P,) int32 longest dup run
+    refit_gen: Optional[jax.Array] = None    # (P,) int32 refit counter
     # --- static (aux) ---
     eps: int = dataclasses.field(metadata=dict(static=True), default=32)
     radix_bits: int = dataclasses.field(metadata=dict(static=True), default=10)
     probe: int = dataclasses.field(metadata=dict(static=True), default=64)
     key_spec: K.KeySpec = dataclasses.field(
         metadata=dict(static=True), default_factory=K.KeySpec)
+    epoch: int = dataclasses.field(metadata=dict(static=True), default=0)
+    shape_epoch: int = dataclasses.field(
+        metadata=dict(static=True), default=0)
+    overflow_pid: int = dataclasses.field(
+        metadata=dict(static=True), default=-1)
 
     @property
     def num_partitions(self) -> int:
@@ -65,6 +101,19 @@ class LearnedSpatialIndex:
     @property
     def n_pad(self) -> int:
         return self.key.shape[1]
+
+    @property
+    def delta_cap(self) -> int:
+        """Static per-partition delta-slot capacity (0 = no buffer)."""
+        return 0 if self.delta_key is None else self.delta_key.shape[1]
+
+    @property
+    def overflow(self) -> int:
+        """Partition id of the overflow grid (paper §3.1). Indexes built
+        before the mutable-state split default to the last partition —
+        correct pre-padding, preserved by ``pad_partitions`` since."""
+        return (self.overflow_pid if self.overflow_pid >= 0
+                else self.num_partitions - 1)
 
     def size_bytes(self) -> dict:
         """Index-only footprint (the paper's 'lightweight' claim)."""
@@ -92,6 +141,20 @@ def assign_partitions(x, y, boxes, *, chunk: int = 1 << 20):
     return jnp.where(hit, first, boxes.shape[0]).astype(jnp.int32)
 
 
+def probe_for(eps: int, max_run: int, n_pad: int) -> int:
+    """Probe-window width for exact lower bounds: a centered window of
+    twice (eps + max_run) rounded up to a power of two. The greedy
+    corridor's interpolation error can reach 2*eps at a restart (the
+    new anchor is a data point up to eps off the fitted line); the
+    power-of-two round-up headroom covers that overshoot in practice,
+    and ``mutate.verify_eps`` exposes the measured error as a host
+    diagnostic (tests re-check it per touched partition after every
+    re-fit). Shared by build and per-partition re-fit, so a fully
+    refit index sizes its window exactly like a fresh build."""
+    probe = int(2 ** np.ceil(np.log2(2 * (eps + max_run) + 4)))
+    return min(probe, n_pad)
+
+
 # ---------------------------------------------------------------------------
 # steps 2-4: shuffle + layout + learn
 # ---------------------------------------------------------------------------
@@ -99,12 +162,18 @@ def assign_partitions(x, y, boxes, *, chunk: int = 1 << 20):
 def build_index(x, y, partitioner: Partitioner, *,
                 key_spec: K.KeySpec | None = None, eps: int = 32,
                 radix_bits: int = 10, m_pad: int | None = None,
-                n_pad: int | None = None) -> LearnedSpatialIndex:
+                n_pad: int | None = None, vid=None,
+                delta_cap: int = 0) -> LearnedSpatialIndex:
     """Build the full distributed learned index (host entry point).
 
     Host-level sizing (n_pad / m_pad / probe window) is data-dependent but
     becomes STATIC in the returned index, keeping every query jit-able with
     fixed shapes.
+
+    ``vid`` optionally overrides the per-point ids (default: position in
+    the input arrays) — used to rebuild an index bitwise-equivalent to a
+    mutated one (tests/test_updates.py). ``delta_cap`` pre-allocates the
+    per-partition insert-slot capacity (the executor grows it on demand).
     """
     x = jnp.asarray(x, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
@@ -124,7 +193,10 @@ def build_index(x, y, partitioner: Partitioner, *,
     composite = (pid.astype(jnp.uint32) << kb) | key
     order = jnp.argsort(composite)
     key_s, x_s, y_s, pid_s = key[order], x[order], y[order], pid[order]
-    vid_s = order.astype(jnp.int32)
+    if vid is None:
+        vid_s = order.astype(jnp.int32)
+    else:
+        vid_s = jnp.asarray(vid, jnp.int32)[order]
 
     counts = jnp.bincount(pid, length=p_total)
     if n_pad is None:
@@ -158,8 +230,7 @@ def build_index(x, y, partitioner: Partitioner, *,
     m_eff = min(m_eff, m_pad)
 
     max_run = int(jnp.max(fit["max_run"]))
-    probe = int(2 ** np.ceil(np.log2(2 * (eps + max_run) + 4)))
-    probe = min(probe, n_pad)
+    probe = probe_for(eps, max_run, n_pad)
 
     return LearnedSpatialIndex(
         key=key_g, x=x_g, y=y_g, vid=vid_g,
@@ -171,7 +242,16 @@ def build_index(x, y, partitioner: Partitioner, *,
         radix_kmin=fit["radix_kmin"],
         radix_scale=fit["radix_scale"],
         part_bounds=jnp.asarray(partitioner.partition_bounds()),
+        delta_key=jnp.full((p_total, delta_cap), sentinel, jnp.uint32),
+        delta_x=jnp.full((p_total, delta_cap), PAD_COORD, jnp.float32),
+        delta_y=jnp.full((p_total, delta_cap), PAD_COORD, jnp.float32),
+        delta_vid=jnp.full((p_total, delta_cap), -1, jnp.int32),
+        delta_count=jnp.zeros((p_total,), jnp.int32),
+        dead=jnp.zeros((p_total,), jnp.int32),
+        max_run=fit["max_run"].astype(jnp.int32),
+        refit_gen=jnp.zeros((p_total,), jnp.int32),
         eps=eps, radix_bits=radix_bits, probe=probe, key_spec=key_spec,
+        overflow_pid=p_total - 1,
     )
 
 

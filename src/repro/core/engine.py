@@ -29,8 +29,9 @@ from jax.sharding import Mesh
 
 from repro.core.build import LearnedSpatialIndex
 from repro.core.executor import Executor
-from repro.core.plan import (CircleQuery, EngineConfig, Knn, PointQuery,
-                             RangeCount, RangeQuery, SpatialJoin)
+from repro.core.plan import (CircleQuery, DeleteBatch, EngineConfig,
+                             InsertBatch, Knn, PointQuery, RangeCount,
+                             RangeQuery, SpatialJoin)
 
 # compat re-exports: these lived here pre-plan; the local SPMD programs
 # themselves moved to core/local_ops.py (import them from there)
@@ -139,3 +140,25 @@ class SpatialEngine:
         """
         return self.executor.run(SpatialJoin(mode=mode), polys, n_edges,
                                  strict=True)
+
+    # -- mutations (epoch-versioned mutable index, DESIGN.md §11) --------
+
+    @property
+    def epoch(self) -> int:
+        """Mutation epoch of the resident index."""
+        return self.executor.index.epoch
+
+    def insert(self, xs, ys):
+        """Batched insert into the per-partition delta buffers.
+        Returns the assigned point ids (B,)."""
+        return self.executor.run(InsertBatch(), xs, ys)
+
+    def delete(self, xs, ys) -> int:
+        """Batched delete by coordinate (tombstones every live copy).
+        Returns the number of removed points."""
+        return self.executor.run(DeleteBatch(), xs, ys)
+
+    def refit(self, touched=None):
+        """Compaction + spline re-fit of ``touched`` (default: every
+        dirty) partitions. Returns the partition ids re-fit."""
+        return self.executor.refit(touched)

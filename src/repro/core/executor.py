@@ -27,8 +27,11 @@ Two execution modes for adaptive specs:
                 syncs while counts stay exact. The ``ok`` flags of
                 materializing specs still report window completeness.
 
-Every host synchronization goes through ``_all_ok`` and is counted in
-``host_syncs`` — asserted by the dispatch-count test.
+Every QUERY-path host synchronization goes through ``_all_ok`` and is
+counted in ``host_syncs`` — asserted by the dispatch-count test.
+Mutations (InsertBatch/DeleteBatch/Refit, DESIGN.md §11) are
+host-driven like ``build_index`` and block deliberately; they never
+ride the zero-sync steady path.
 """
 from __future__ import annotations
 
@@ -42,12 +45,14 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import keys as K
+from repro.core import mutate as M
 from repro.core import queries as Q
 from repro.core.backends import resolve_backend
 from repro.core.build import LearnedSpatialIndex
-from repro.core.plan import (CircleQuery, EngineConfig, Knn, PointQuery,
-                             QuerySpec, RangeCount, RangeQuery,
-                             SpatialJoin, exec_key)
+from repro.core.plan import (CircleQuery, DeleteBatch, EngineConfig,
+                             InsertBatch, Knn, PointQuery, QuerySpec,
+                             RangeCount, RangeQuery, Refit, SpatialJoin,
+                             exec_key)
 from repro.core import local_ops as L
 from repro.core.local_ops import _axes
 
@@ -127,14 +132,21 @@ class Executor:
         self.spec = index.key_spec
         b = index.key_spec.bounds
         self.area = max((b[2] - b[0]) * (b[3] - b[1]), 1e-30)
-        self.n_total = int(jnp.sum(index.count))
-        self.density = max(self.n_total / self.area, 1e-30)
+        self._recount()
+        self._psharding = None
         if mesh is not None:
-            pspec = P(_axes(part_axis))
-            self.parts = jax.device_put(
-                self.parts, NamedSharding(mesh, pspec))
+            self._psharding = NamedSharding(mesh, P(_axes(part_axis)))
+            self.parts = jax.device_put(self.parts, self._psharding)
             self.bounds = jax.device_put(
                 self.bounds, NamedSharding(mesh, P()))
+        # -- mutable-index state (DESIGN.md §11) -------------------------
+        nxt = int(jnp.max(index.vid))
+        if index.delta_vid is not None and index.delta_cap:
+            nxt = max(nxt, int(jnp.max(index.delta_vid)))
+        self.next_vid = nxt + 1
+        self._refit_pending = set()  # partition ids awaiting compaction
+        self.updates = 0      # applied insert/delete batches
+        self.refits = 0       # refit_partitions invocations
         self._cache = {}      # exec_key -> compiled callable
         self._sticky = {}     # sticky_key -> last-successful (cap, cand)
         self._initial = {}    # sticky_key -> initial-config (cap, cand)
@@ -150,9 +162,11 @@ class Executor:
     # -- compilation + executable cache ----------------------------------
 
     def _key(self, base, tag="x", variant=None, qshard=False):
-        """Canonical cache key (plan.exec_key): backend + qshard aware."""
+        """Canonical cache key (plan.exec_key): backend + qshard +
+        shape-epoch aware (compiled programs bake the index's static
+        shapes; superseded shape epochs are swept by _evict_stale)."""
         return exec_key(self.backend.name, base, tag, variant,
-                        qshard=qshard)
+                        qshard=qshard, epoch=self.index.shape_epoch)
 
     def _query_shards(self) -> int:
         return int(np.prod([self.mesh.shape[a]
@@ -225,7 +239,7 @@ class Executor:
         return fn(self.parts, self.bounds, *args)
 
     def _all_ok(self, ok) -> bool:
-        """The ONLY host-blocking read in the executor (counted)."""
+        """The ONLY host-blocking read on the QUERY path (counted)."""
         self.host_syncs += 1
         return bool(jnp.all(ok))
 
@@ -254,6 +268,19 @@ class Executor:
                     key[4] not in keep):
                 del self._cache[key]
 
+    def _evict_stale(self):
+        """Drop executables whose index shape epoch is superseded.
+
+        Cap-variant eviction (_evict) only sweeps one plan key; without
+        this sweep a long-lived serve session leaks every compiled
+        program across updates that change a static shape (delta
+        capacity growth, n_pad/knot widening, probe refresh).
+        """
+        cur = self.index.shape_epoch
+        for key in list(self._cache):
+            if key[5] != cur:
+                del self._cache[key]
+
     def cache_variants(self, base) -> list:
         """Cached (tag, (cap, cand)) window variants for one sticky key."""
         return sorted((k[3], k[4]) for k in self._cache
@@ -270,7 +297,180 @@ class Executor:
                 "cache_size": len(self._cache),
                 "backend": self.backend.name,
                 "qshard_executables": sum(1 for k in self._cache if k[1]),
-                "sticky": dict(self._sticky)}
+                "sticky": dict(self._sticky),
+                "epoch": self.index.epoch,
+                "shape_epoch": self.index.shape_epoch,
+                "updates": self.updates,
+                "refits": self.refits,
+                "pending_refit": sorted(self._refit_pending)}
+
+    # -- mutable-index state management (DESIGN.md §11) ------------------
+
+    def _recount(self):
+        """Refresh the live-point total + density (kNN r0 seeding)."""
+        idx = self.index
+        n = int(jnp.sum(idx.count))
+        if idx.dead is not None:
+            n -= int(jnp.sum(idx.dead))
+        if idx.delta_vid is not None and idx.delta_cap:
+            n += int(jnp.sum((idx.delta_vid >= 0).astype(jnp.int32)))
+        self.n_total = n
+        self.density = max(n / self.area, 1e-30)
+
+    def _install_index(self, new_index, leaves=None):
+        """Swap in a mutated index: refresh the (possibly sharded) parts
+        leaves and evict executables compiled against superseded static
+        shapes. ``leaves`` limits the refresh to the planes a mutation
+        actually touched (inserts never re-place the sorted data plane).
+        """
+        shape_changed = new_index.shape_epoch != self.index.shape_epoch
+        self.index = new_index
+        names = L.part_leaf_names(new_index)
+        if (shape_changed or leaves is None
+                or names != set(self.parts)):
+            leaves = names
+        upd = L.part_arrays(new_index, leaves=leaves)
+        if self.mesh is not None:
+            upd = {k: jax.device_put(v, self._psharding)
+                   for k, v in upd.items()}
+        parts = dict(self.parts)
+        parts.update(upd)
+        self.parts = {k: parts[k] for k in names}
+        self.bounds = new_index.part_bounds    # (P, 4): cheap, always
+        if self.mesh is not None:
+            self.bounds = jax.device_put(
+                self.bounds, NamedSharding(self.mesh, P()))
+        if shape_changed:
+            self._evict_stale()
+        self._recount()
+
+    def _update_fn(self, kind: str, b: int, fn):
+        """Update executables cache like queries: one jitted instance
+        per (batch size, delta capacity) variant, so `_evict_stale`
+        sweeping a superseded shape epoch actually frees its compiled
+        programs (the mutate kernels are exported unjitted)."""
+        key = self._key((kind,), "u", (b, self.index.delta_cap))
+        if key not in self._cache:
+            self._cache[key] = jax.jit(fn)
+        self.dispatches += 1
+        return self._cache[key]
+
+    def _note_occupancy(self, touched):
+        """Schedule deferred compaction+re-fit for partitions whose
+        delta occupancy crossed the threshold (executed by maintain(),
+        off the hot path — exactly like tier demotion)."""
+        occ = M.delta_occupancy(self.index)
+        for p in np.asarray(touched).tolist():
+            if occ[p] > self.cfg.delta_occupancy:
+                self._refit_pending.add(int(p))
+
+    def _run_insert(self, args):
+        """InsertBatch: append to the target partitions' delta buffers.
+        Returns the assigned vids (B,). Host-driven like build_index —
+        the capacity check is a blocking read, off the query hot path.
+        """
+        xs = jnp.asarray(args[0], jnp.float32)
+        ys = jnp.asarray(args[1], jnp.float32)
+        b = int(xs.shape[0])
+        if b == 0:
+            return np.zeros((0,), np.int32)
+        idx = self.index
+        if idx.delta_count is None:      # hand-built index: add aux state
+            idx = M.with_delta_capacity(idx, 0, floor=0)
+            self._install_index(idx)
+        pid = M.assign_insert(idx, xs, ys)
+        # out-of-domain inserts land in the overflow grid; widen its box
+        # so the global filter (rect/circle/kNN/join candidate
+        # selection) can SEE them — otherwise only the point probe,
+        # which targets overflow unconditionally, would find them.
+        # (Keys still clip to key_spec.bounds; the coordinate refine is
+        # exact on the stored f32 coords, so counts stay right.)
+        ob = np.asarray(idx.part_bounds[idx.overflow])
+        nb = [min(ob[0], float(xs.min())), min(ob[1], float(ys.min())),
+              max(ob[2], float(xs.max())), max(ob[3], float(ys.max()))]
+        if nb != ob.tolist():
+            idx = dataclasses.replace(
+                idx, part_bounds=idx.part_bounds.at[idx.overflow].set(
+                    jnp.asarray(nb, jnp.float32)))
+            self._install_index(idx, leaves=())
+        need = np.asarray(idx.delta_count) + np.bincount(
+            np.asarray(pid), minlength=idx.num_partitions)
+        if int(need.max()) > idx.delta_cap:
+            idx = M.with_delta_capacity(idx, int(need.max()),
+                                        floor=self.cfg.delta_cap)
+            self._install_index(idx)     # shape change: evict + refresh
+        key = K.make_keys(xs, ys, self.spec)
+        vids = jnp.arange(self.next_vid, self.next_vid + b,
+                          dtype=jnp.int32)
+        fn = self._update_fn("insert", b, M.scatter_inserts)
+        dk, dx, dy, dv, dc = fn(idx.delta_key, idx.delta_x, idx.delta_y,
+                                idx.delta_vid, idx.delta_count, pid,
+                                key, xs, ys, vids)
+        idx = dataclasses.replace(
+            idx, delta_key=dk, delta_x=dx, delta_y=dy, delta_vid=dv,
+            delta_count=dc, epoch=idx.epoch + 1)
+        self.next_vid += b
+        self.updates += 1
+        self._install_index(idx, leaves=("dx", "dy", "dvid", "dcount"))
+        self._note_occupancy(np.unique(np.asarray(pid)))
+        return np.arange(self.next_vid - b, self.next_vid, dtype=np.int32)
+
+    def _run_delete(self, args):
+        """DeleteBatch: tombstone every live copy of each (x, y) in its
+        candidate partitions (main plane + delta). Returns the removed
+        count."""
+        xs = jnp.asarray(args[0], jnp.float32)
+        ys = jnp.asarray(args[1], jnp.float32)
+        b = int(xs.shape[0])
+        if b == 0:
+            return 0
+        idx = self.index
+        if idx.delta_count is None:      # hand-built index: add aux state
+            idx = M.with_delta_capacity(idx, 0, floor=0)
+            self._install_index(idx)
+        pid1 = M.assign_insert(idx, xs, ys)
+        pid2 = jnp.full_like(pid1, idx.overflow)
+        fn = self._update_fn("delete", b, M.apply_deletes)
+        nx, ny, nv, dx, dy, dv, dead2, removed = fn(
+            idx.x, idx.y, idx.vid, idx.count, idx.delta_x, idx.delta_y,
+            idx.delta_vid, idx.delta_count, idx.dead, xs, ys, pid1, pid2)
+        idx = dataclasses.replace(
+            idx, x=nx, y=ny, vid=nv, delta_x=dx, delta_y=dy,
+            delta_vid=dv, dead=dead2, epoch=idx.epoch + 1)
+        self.updates += 1
+        leaves = ("x", "y", "vid")
+        if idx.delta_cap:
+            leaves = leaves + ("dx", "dy", "dvid")
+        self._install_index(idx, leaves=leaves)
+        self._note_occupancy(np.unique(np.append(np.asarray(pid1),
+                                                 idx.overflow)))
+        return int(removed)
+
+    def refit(self, touched=None):
+        """Compaction + per-partition spline re-fit (mutate.refit_
+        partitions): merge delta buffers, drop tombstones, re-fit ONLY
+        the given partitions (default: every dirty one). Returns the
+        list of partition ids re-fit."""
+        idx = self.index
+        if idx.delta_count is None:
+            return []
+        if touched is None:
+            touched = M.dirty_partitions(idx)
+        touched = np.unique(np.asarray(touched, np.int32))
+        if touched.size == 0:
+            return []
+        new = M.refit_partitions(idx, touched)
+        self.refits += 1
+        self._refit_pending.difference_update(int(t) for t in touched)
+        self._install_index(new)         # data plane moved: full refresh
+        # shed a burst-grown delta buffer once fully compacted (the 2x
+        # floor hysteresis rate-limits grow/shrink compile ping-pong)
+        idx2 = self.index
+        if (idx2.delta_cap > 2 * max(self.cfg.delta_cap, 1)
+                and M.dirty_partitions(idx2).size == 0):
+            self._install_index(
+                M.shrink_delta_capacity(idx2, self.cfg.delta_cap))
+        return [int(t) for t in touched]
 
     def maintain(self) -> dict:
         """Deferred re-tuning: host-check the stashed ok flags of recent
@@ -324,6 +524,13 @@ class Executor:
                         self._demote_backoff.get(base, 1) * 2
                 self._set_sticky(base, new)
                 moved[base] = new
+        # deferred compaction + re-fit, scheduled by updates whose delta
+        # occupancy crossed the threshold — executed here, off the hot
+        # path, exactly like tier re-tuning (DESIGN.md §11)
+        if self._refit_pending:
+            done = self.refit(sorted(self._refit_pending))
+            if done:
+                moved["refit"] = done
         return moved
 
     # -- public entry points ---------------------------------------------
@@ -335,6 +542,12 @@ class Executor:
         if len(args) != spec.n_args:
             raise TypeError(f"{type(spec).__name__} takes {spec.n_args} "
                             f"data arguments, got {len(args)}")
+        if isinstance(spec, InsertBatch):
+            return self._run_insert(args)
+        if isinstance(spec, DeleteBatch):
+            return self._run_delete(args)
+        if isinstance(spec, Refit):
+            return self.refit()
         if isinstance(spec, PointQuery):
             return self._run_point(args)
         if isinstance(spec, RangeCount):

@@ -47,6 +47,9 @@ def pad_partitions(index: LearnedSpatialIndex, multiple: int
         pad_block = jnp.full((extra,) + a.shape[1:], fill, a.dtype)
         return jnp.concatenate([a, pad_block], axis=0)
 
+    def pad_opt(a, fill):
+        return None if a is None else pad(a, fill)
+
     return dataclasses.replace(
         index,
         key=pad(index.key, index.key_spec.sentinel),
@@ -61,19 +64,56 @@ def pad_partitions(index: LearnedSpatialIndex, multiple: int
         part_bounds=jnp.concatenate(
             [index.part_bounds,
              jnp.broadcast_to(jnp.asarray(EMPTY_BOX), (extra, 4))], axis=0),
+        delta_key=pad_opt(index.delta_key, index.key_spec.sentinel),
+        delta_x=pad_opt(index.delta_x, 3e38),
+        delta_y=pad_opt(index.delta_y, 3e38),
+        delta_vid=pad_opt(index.delta_vid, -1),
+        delta_count=pad_opt(index.delta_count, 0),
+        dead=pad_opt(index.dead, 0),
+        max_run=pad_opt(index.max_run, 0),
+        refit_gen=pad_opt(index.refit_gen, 0),
+        # the true overflow grid keeps its pre-padding position
+        overflow_pid=index.overflow,
     )
 
 
-def part_arrays(index: LearnedSpatialIndex) -> dict:
-    """Shardable dict-of-arrays view (leading axis = partitions)."""
-    return {
-        "keys_f": K.keys_to_f32(index.key),
+def part_leaf_names(index: LearnedSpatialIndex) -> set:
+    """Leaf names part_arrays would produce (no arrays materialized)."""
+    names = {"keys_f", "x", "y", "vid", "count", "knot_keys",
+             "knot_pos", "n_knots", "radix_table", "radix_kmin",
+             "radix_scale"}
+    if index.delta_cap:
+        names |= {"dx", "dy", "dvid", "dcount"}
+    return names
+
+
+def part_arrays(index: LearnedSpatialIndex, leaves=None) -> dict:
+    """Shardable dict-of-arrays view (leading axis = partitions).
+
+    The delta-buffer leaves appear only when the index carries a
+    non-zero delta capacity, so frozen-index programs (and the dry-run
+    harness, which builds this dict by hand) are unchanged. ``leaves``
+    restricts the result to the named subset — the executor's update
+    path refreshes only the planes a mutation touched, and in
+    particular skips the O(N) keys_f cast unless the key plane moved.
+    """
+    parts = {
         "x": index.x, "y": index.y, "vid": index.vid,
         "count": index.count,
         "knot_keys": index.knot_keys, "knot_pos": index.knot_pos,
         "n_knots": index.n_knots, "radix_table": index.radix_table,
         "radix_kmin": index.radix_kmin, "radix_scale": index.radix_scale,
     }
+    if index.delta_cap:
+        parts.update({
+            "dx": index.delta_x, "dy": index.delta_y,
+            "dvid": index.delta_vid, "dcount": index.delta_count,
+        })
+    if leaves is None or "keys_f" in leaves:
+        parts["keys_f"] = K.keys_to_f32(index.key)
+    if leaves is not None:
+        return {k: parts[k] for k in leaves}
+    return parts
 
 
 def _map_parts(f, parts, chunk: int, init=None):
@@ -166,6 +206,22 @@ def _keep_window(vids, cnt, cap: int):
     return kept, cap_ok
 
 
+def _delta_knn_candidates(parts, pid, valid, qx, qy, r):
+    """Live buffered candidates within radius r of (Q, C) candidate
+    partitions (the kNN delta probe, DESIGN.md §11; liveness comes
+    from the shared Q.gather_delta rule).
+
+    Returns (counts (Q,), vids (Q, C*d_cap), neg_d2 (Q, C*d_cap)).
+    """
+    qn = pid.shape[0]
+    dx, dy, dv, live = Q.gather_delta(parts, pid, valid)
+    d2 = ((dx - qx[:, None, None]) ** 2 + (dy - qy[:, None, None]) ** 2)
+    inc = live & (d2 <= (r * r)[:, None, None])
+    return (jnp.sum(inc.astype(jnp.int32), axis=(1, 2)),
+            jnp.where(inc, dv, -1).reshape(qn, -1),
+            jnp.where(inc, -d2, -3e38).reshape(qn, -1))
+
+
 # ---------------------------------------------------------------------------
 # local programs
 # ---------------------------------------------------------------------------
@@ -179,6 +235,10 @@ class _LocalFn:
         self.p_total = index.num_partitions
         self.n_pad = index.n_pad
         self.spec = index.key_spec
+        # static: d_cap == 0 compiles the delta probes away entirely,
+        # keeping frozen-index programs bitwise the pre-update ones
+        self.d_cap = index.delta_cap
+        self.overflow = index.overflow
 
     def _local_offset(self, axis, p_loc):
         if axis is None:
@@ -212,11 +272,11 @@ class _PointLocal(_LocalFn):
         n_pad = parts["keys_f"].shape[1]
         # global filter: first-match grid (paper Alg. 1 semantics) and the
         # overflow grid are the only partitions that can contain the point.
-        inb = Q.point_in_box(qx, qy, bounds[:-1])        # (Q, G)
+        inb = Q.point_in_box(qx, qy, bounds[:self.overflow])  # (Q, G)
         hit = jnp.any(inb, axis=1)
         pid1 = jnp.where(hit, jnp.argmax(inb, axis=1).astype(jnp.int32),
-                         self.p_total - 1)
-        pid2 = jnp.full_like(pid1, self.p_total - 1)      # overflow grid
+                         self.overflow)
+        pid2 = jnp.full_like(pid1, self.overflow)         # overflow grid
 
         def probe_pid(pid):
             lid = pid - off
@@ -226,6 +286,12 @@ class _PointLocal(_LocalFn):
             start = jnp.clip(pos - probe // 2, 0, n_pad - probe)
             f = bk.point_scan(parts, lid, start, qk, qx, qy,   # scan
                               probe=probe)
+            if self.d_cap:                                 # delta probe
+                ddx, ddy, _, live = Q.gather_delta(
+                    parts, lid[:, None], mine[:, None])
+                f = f | jnp.any(live[:, 0] &
+                                (ddx[:, 0] == qx[:, None]) &
+                                (ddy[:, 0] == qy[:, None]), axis=1)
             return f & mine
 
         found = probe_pid(pid1) | probe_pid(pid2)
@@ -249,8 +315,11 @@ class _RangeCountLocal(_LocalFn):
                 act = jax.lax.dynamic_index_in_dim(
                     overlap, base + j, axis=1, keepdims=False)
                 s, e = bk.bounds(part, klo, khi, **self.kw)   # lookup
-                return bk.range_scan(part, rects, s, e,       # scan
-                                     active=act)
+                cnt = bk.range_scan(part, rects, s, e,        # scan
+                                    active=act)
+                if self.d_cap:
+                    cnt = cnt + bk.delta_scan(part, rects, active=act)
+                return cnt
 
             cnts = _for_parts(bk, one, (jnp.arange(c), ch))   # (C, Q)
             return {"i": carry["i"] + 1,
@@ -281,8 +350,12 @@ class _CircleCountLocal(_LocalFn):
                 act = jax.lax.dynamic_index_in_dim(
                     overlap, base + j, axis=1, keepdims=False)
                 s, e = bk.bounds(part, klo, khi, **self.kw)   # lookup
-                return bk.circle_scan(part, rects, s, e, circ,  # scan
-                                      active=act)
+                cnt = bk.circle_scan(part, rects, s, e, circ,  # scan
+                                     active=act)
+                if self.d_cap:
+                    cnt = cnt + bk.delta_scan(part, rects, circ=circ,
+                                              active=act)
+                return cnt
 
             cnts = _for_parts(bk, one, (jnp.arange(c), ch))
             return {"i": carry["i"] + 1,
@@ -322,6 +395,10 @@ class _RangeWindowLocal(_LocalFn):
         cnts, vids, ok, _, _ = Q.range_window_at(
             parts, boxes, local, mine, rects, self.spec, cap=self.cap,
             **self.kw)
+        if self.d_cap:
+            dcnts, dvids = Q.delta_window_at(parts, local, mine, rects)
+            cnts = cnts + dcnts
+            vids = jnp.concatenate([vids, dvids], axis=-1)
         cnt = _psum(jnp.sum(cnts, axis=1), axis)
         vids = vids.reshape(qn, -1)
         okq = jnp.all(ok | ~mine, axis=1)
@@ -364,6 +441,12 @@ class _CircleWindowLocal(_LocalFn):
         cnts, vids, ok = Q.circle_window_at(
             parts, boxes, local, mine, rects, circ, self.spec,
             cap=self.cap, materialize=self.materialize, **self.kw)
+        if self.d_cap:
+            dcnts, dvids = Q.delta_window_at(parts, local, mine, rects,
+                                             circ=circ)
+            cnts = cnts + dcnts
+            if self.materialize:
+                vids = jnp.concatenate([vids, dvids], axis=-1)
         cnt = _psum(jnp.sum(cnts, axis=1), axis)
         okq = jnp.all(ok | ~mine, axis=1)
         if axis is not None:
@@ -393,8 +476,14 @@ class _KnnExactLocal(_LocalFn):
         def chunk_fn(ch, carry):
             def one(part):
                 # scan stage: (Q, W) per-partition candidates — W is the
-                # full row for xla, the kernel's top-k for pallas
-                return bk.knn_scan(part, qx, qy, k)
+                # full row for xla, the kernel's top-k for pallas; the
+                # delta probe appends its (tiny) buffered candidates
+                neg, vid = bk.knn_scan(part, qx, qy, k)
+                if self.d_cap:
+                    dneg, dvid = bk.delta_knn_scan(part, qx, qy)
+                    neg = jnp.concatenate([neg, dneg], axis=1)
+                    vid = jnp.concatenate([vid, dvid], axis=1)
+                return neg, vid
 
             neg, vid = _for_parts(bk, one, (ch,))          # (C, Q, W)
             neg = jnp.swapaxes(neg, 0, 1).reshape(qn, -1)
@@ -465,9 +554,18 @@ class _KnnPrunedLocal(_LocalFn):
             inc = (vids >= 0) & (d2 <= (r * r)[:, None, None])
             negd = jnp.where(inc, -d2, -3e38).reshape(qn, -1)
             wv = jnp.where(inc, vids, -1).reshape(qn, -1)
+            cnt = jnp.sum(inc.astype(jnp.int32), axis=(1, 2))
+            if self.d_cap:
+                # buffered candidates of the same candidate partitions:
+                # an insert is in-circle iff within r (coverage already
+                # guarantees every in-range partition is a candidate)
+                dcnts, dvids, dd2 = _delta_knn_candidates(
+                    parts, local, active, qx, qy, r)
+                negd = jnp.concatenate([negd, dd2], axis=1)
+                wv = jnp.concatenate([wv, dvids], axis=1)
+                cnt = cnt + dcnts
             bn, ix = jax.lax.top_k(negd, k)
             bv = jnp.take_along_axis(wv, ix, axis=1)
-            cnt = jnp.sum(inc.astype(jnp.int32), axis=(1, 2))
             okq = jnp.all(ok | ~active, axis=1) & covered
             if axis is not None:
                 bn_g = jax.lax.all_gather(bn, axis, axis=1, tiled=True)
@@ -527,6 +625,15 @@ class _JoinLocal(_LocalFn):
         cnts, vids, ok, wx, wy = Q.range_window_at(
             parts, boxes, local, mine, mbrs, self.spec, cap=self.cap,
             z_depth=3, **self.kw)
+        if self.d_cap:
+            dxw, dyw, dvw, live = Q.gather_delta(parts, local, mine)
+            r = mbrs[:, None, None, :]
+            inm = (live & (dxw >= r[..., 0]) & (dxw <= r[..., 2]) &
+                   (dyw >= r[..., 1]) & (dyw <= r[..., 3]))
+            wx = jnp.concatenate([wx, dxw], axis=-1)
+            wy = jnp.concatenate([wy, dyw], axis=-1)
+            vids = jnp.concatenate([vids, jnp.where(inm, dvw, -1)],
+                                   axis=-1)
 
         def pip(poly, ne, wxq, wyq, vq):
             inside = Q.point_in_polygon(wxq.reshape(-1),
@@ -564,8 +671,12 @@ class _JoinFullLocal(_LocalFn):
                 act = jax.lax.dynamic_index_in_dim(
                     overlap, base + j, axis=1, keepdims=False)
                 s, e = bk.bounds(part, klo, khi, **self.kw)   # lookup
-                return bk.join_scan(part, polys, n_edges, mbrs,  # scan
-                                    s, e, active=act)
+                cnt = bk.join_scan(part, polys, n_edges, mbrs,  # scan
+                                   s, e, active=act)
+                if self.d_cap:
+                    cnt = cnt + bk.delta_join_scan(part, polys, n_edges,
+                                                   mbrs, active=act)
+                return cnt
 
             cnts = _for_parts(bk, one, (jnp.arange(c), ch))   # (C, PG)
             return {"i": carry["i"] + 1,

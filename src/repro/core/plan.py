@@ -45,14 +45,19 @@ class EngineConfig:
     query_shard_threshold: int = 1024   # min batch to shard query axis
     demote_after: int = 3        # consecutive clean maintain() checks
                                  # before a sticky tier steps back down
+    delta_cap: int = 128         # delta-buffer capacity floor on first
+                                 # insert (grows by doubling; DESIGN §11)
+    delta_occupancy: float = 0.5  # (buffered + tombstoned) / live
+                                  # fraction above which the executor
+                                  # schedules a deferred re-fit
 
 
 def exec_key(backend: str, base: Tuple, tag: str = "x",
              variant: Optional[Tuple] = None,
-             qshard: bool = False) -> Tuple:
-    """Canonical executable-cache key (DESIGN.md §10 cache-key layout).
+             qshard: bool = False, epoch: int = 0) -> Tuple:
+    """Canonical executable-cache key (DESIGN.md §10/§11 layout).
 
-    ``(backend, qshard, base, tag, variant)``:
+    ``(backend, qshard, base, tag, variant, epoch)``:
 
       backend   Backend.name — compiled programs are never shared across
                 kernel backends;
@@ -62,11 +67,20 @@ def exec_key(backend: str, base: Tuple, tag: str = "x",
       base      the spec's sticky/cache base tuple (``sticky_key()`` for
                 adaptive ops, a literal kind tuple otherwise);
       tag       program flavor within the base: "x" exact/simple,
-                "w" strict windowed tier, "fused" zero-sync steady tier;
+                "w" strict windowed tier, "fused" zero-sync steady tier,
+                "u" update (insert/delete) executable;
       variant   the (cap, cand) tier for "w"/"fused" programs — the slot
-                the executor's eviction policy sweeps.
+                the executor's eviction policy sweeps — or the
+                epoch-invariant data shapes (batch size, capacity) for
+                "u" programs, so update executables cache like queries;
+      epoch     the index's SHAPE epoch (not the mutation epoch): bumps
+                only when a compiled-shape-relevant static changes
+                (delta capacity, n_pad, knot width, probe). Executables
+                stay cached across ordinary updates; `_evict_stale`
+                sweeps superseded shape epochs.
     """
-    return (str(backend), bool(qshard), tuple(base), str(tag), variant)
+    return (str(backend), bool(qshard), tuple(base), str(tag), variant,
+            int(epoch))
 
 
 class QuerySpec:
@@ -207,5 +221,51 @@ class SpatialJoin(QuerySpec):
         return (self.kind, self.mode)
 
 
+# ---------------------------------------------------------------------------
+# update specs: mutations through the same executor (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+class UpdateSpec(QuerySpec):
+    """Base class for declarative index mutations.
+
+    Like queries, an UpdateSpec carries no data: batches are passed to
+    ``Executor.run(spec, *args)`` and the jitted mutation kernels cache
+    in the same executable cache, keyed by their epoch-invariant shapes
+    (batch size, delta capacity) — repeated same-sized update batches
+    dispatch with zero recompiles.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class InsertBatch(UpdateSpec):
+    """Batched insert. args: (xs (B,), ys (B,)) -> assigned vids (B,).
+
+    Points are appended to their target partition's delta buffer; the
+    spline is NOT re-fit (that is deferred to ``Refit`` / the
+    executor's occupancy-triggered ``maintain()`` compaction).
+    """
+    kind = "insert"
+    n_args = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class DeleteBatch(UpdateSpec):
+    """Batched delete by coordinate. args: (xs (B,), ys (B,)) ->
+    removed count (int). Removes EVERY live copy of each (x, y)."""
+    kind = "delete"
+    n_args = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Refit(UpdateSpec):
+    """Compaction + per-partition spline re-fit of every dirty
+    partition (buffered inserts or tombstones). args: () -> the list of
+    partition ids re-fit. Targeted re-fit: ``Executor.refit(touched)``.
+    """
+    kind = "refit"
+    n_args = 0
+
+
 ALL_SPEC_TYPES = (PointQuery, RangeCount, RangeQuery, CircleQuery, Knn,
                   SpatialJoin)
+ALL_UPDATE_TYPES = (InsertBatch, DeleteBatch, Refit)

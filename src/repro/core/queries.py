@@ -370,6 +370,53 @@ def circle_window_at(parts, bounds, pid, valid, rects, circ, spec, *,
     return jnp.sum(cnts.reshape(qn, c, sN), axis=-1), None, ok
 
 
+def gather_delta(parts, pid, valid):
+    """Gather (Q, C) candidate partitions' delta buffers + live mask.
+
+    Liveness rule: slot < dcount AND vid >= 0 AND candidate valid.
+    Every QUERY-CENTRIC delta probe (range/circle windows, kNN
+    candidates, join windows) builds on this gather; the partition-
+    centric scans apply the same rule per row in
+    ``backends.XlaBackend.delta_live`` and the point probe inlines it
+    over its lid-gathered rows (local_ops._PointLocal) — change all
+    three together. Returns (dx, dy, dvid (Q, C, d_cap),
+    live (Q, C, d_cap) bool).
+    """
+    qn, c = pid.shape
+    d_cap = parts["dvid"].shape[1]
+    flat = pid.reshape(-1)
+    dx = jnp.take(parts["dx"], flat, axis=0).reshape(qn, c, d_cap)
+    dy = jnp.take(parts["dy"], flat, axis=0).reshape(qn, c, d_cap)
+    dv = jnp.take(parts["dvid"], flat, axis=0).reshape(qn, c, d_cap)
+    dcnt = jnp.take(parts["dcount"], flat, axis=0).reshape(qn, c)
+    slot = jnp.arange(d_cap, dtype=jnp.int32)
+    live = ((slot[None, None, :] < dcnt[..., None]) & (dv >= 0) &
+            valid[..., None])
+    return dx, dy, dv, live
+
+
+def delta_window_at(parts, pid, valid, rects, circ=None):
+    """Live delta-buffer matches of (Q, C) candidate partitions
+    (DESIGN.md §11: the delta probe rides alongside the learned window
+    gather; buffers are tiny, so a full masked scan is the whole cost).
+
+    pid, valid: (Q, C) local partition ids + mask; rects: (Q, 4);
+    circ: optional (Q, 3) [cx, cy, r] distance refine.
+    Returns (counts (Q, C) int32, vids (Q, C, d_cap) int32 padded -1).
+    """
+    dx, dy, dv, live = gather_delta(parts, pid, valid)
+    r = rects[:, None, None, :]
+    m = (live & (dx >= r[..., 0]) & (dx <= r[..., 2]) &
+         (dy >= r[..., 1]) & (dy <= r[..., 3]))
+    if circ is not None:
+        cc = circ[:, None, None, :]
+        ddx = dx - cc[..., 0]
+        ddy = dy - cc[..., 1]
+        m = m & (ddx * ddx + ddy * ddy <= cc[..., 2] * cc[..., 2])
+    return (jnp.sum(m.astype(jnp.int32), axis=-1),
+            jnp.where(m, dv, -1))
+
+
 # ---------------------------------------------------------------------------
 # geometry helpers
 # ---------------------------------------------------------------------------

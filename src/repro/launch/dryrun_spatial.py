@@ -60,6 +60,22 @@ def fake_index() -> LearnedSpatialIndex:
     )
 
 
+def measured_shard_threshold(default: int | None = None) -> tuple:
+    """The PR-2/3 sharding loop closed: prefer the MEASURED crossover
+    recommendation (``python -m benchmarks.run --crossover`` records it
+    in BENCH_quick.json) over the hardcoded EngineConfig default when
+    sizing the production config."""
+    if default is None:
+        default = EngineConfig().query_shard_threshold
+    path = os.environ.get("BENCH_QUICK_OUT", "BENCH_quick.json")
+    try:
+        with open(path) as f:
+            rec = json.load(f)["crossover"]
+        return int(rec["recommended_query_shard_threshold"]), "measured"
+    except (OSError, ValueError, KeyError, TypeError):
+        return int(default), "default"
+
+
 def run(mesh_kind: str, out_dir: str, backend: str = "xla"):
     import repro.core.local_ops as E
     from repro.core.backends import resolve_backend
@@ -68,9 +84,13 @@ def run(mesh_kind: str, out_dir: str, backend: str = "xla"):
     chips = int(np.prod(list(mesh.shape.values())))
     part_axis = ("pod", "data") if mesh_kind == "multi" else ("data",)
     index = fake_index()
+    shard_threshold, shard_src = measured_shard_threshold()
     cfg = EngineConfig(part_chunk=8, range_cap=64, knn_cap=64,
                        range_cand=8, knn_cand=8, join_cap=128,
-                       join_cand=8, backend=backend)
+                       join_cand=8, backend=backend,
+                       query_shard_threshold=shard_threshold)
+    print(f"# query_shard_threshold={shard_threshold} ({shard_src}"
+          " crossover)", flush=True)
     bk = resolve_backend(backend)
 
     # build the shardable parts dict as SDS (mirror _part_arrays)
@@ -105,7 +125,9 @@ def run(mesh_kind: str, out_dir: str, backend: str = "xla"):
         rep.update({"arch": "lilis-spatial", "shape": name,
                     "mesh": mesh_kind, "chips": chips,
                     "compile_s": round(time.time() - t0, 1),
-                    "points": P_TOTAL * N_PAD, "queries": qargs})
+                    "points": P_TOTAL * N_PAD, "queries": qargs,
+                    "query_shard_threshold": shard_threshold,
+                    "query_shard_threshold_src": shard_src})
         path = os.path.join(out_dir, f"lilis-spatial__{name}__"
                                      f"{mesh_kind}.json")
         hlo.dump(rep, path)

@@ -23,7 +23,8 @@ from jax.sharding import Mesh
 
 from repro.core.build import LearnedSpatialIndex
 from repro.core.executor import Executor
-from repro.core.plan import EngineConfig, QuerySpec
+from repro.core.plan import (DeleteBatch, EngineConfig, InsertBatch,
+                             QuerySpec)
 
 
 class SpatialServeSession:
@@ -57,10 +58,31 @@ class SpatialServeSession:
         """A mixed batch of (spec, *args) requests, in order."""
         return self.executor.run_batch(requests, strict=strict)
 
+    # -- mutations (epoch-versioned mutable index, DESIGN.md §11) --------
+
+    def insert(self, xs, ys):
+        """Absorb a batch of new points into the resident index's delta
+        buffers (no re-fit on this path; maintain() compacts when a
+        partition's delta occupancy crosses the configured threshold).
+        Returns the assigned point ids."""
+        return self.executor.run(InsertBatch(), xs, ys)
+
+    def delete(self, xs, ys) -> int:
+        """Tombstone every live copy of each (x, y); returns the number
+        of removed points. Queries remain exact immediately."""
+        return self.executor.run(DeleteBatch(), xs, ys)
+
+    def refit(self, touched=None):
+        """Force compaction + per-partition spline re-fit now (e.g. in
+        a maintenance window) instead of waiting for maintain()."""
+        return self.executor.refit(touched)
+
     def maintain(self) -> dict:
         """Re-tune between batches: check the ok flags stashed by
-        recent zero-sync runs and escalate any overflowed sticky tier.
-        Returns the tiers that moved. Call off the hot path."""
+        recent zero-sync runs, escalate any overflowed sticky tier, and
+        run the deferred compaction+re-fit scheduled by updates whose
+        delta occupancy crossed the threshold. Returns what moved.
+        Call off the hot path."""
         return self.executor.maintain()
 
     def stats(self) -> dict:

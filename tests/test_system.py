@@ -111,7 +111,8 @@ def test_index_serializes_through_checkpoint(system, tmp_path):
     x, y, part, idx, eng = system
     arrays = {f.name: getattr(idx, f.name)
               for f in dataclasses.fields(idx)
-              if f.name not in ("eps", "radix_bits", "probe", "key_spec")}
+              if not f.metadata.get("static")
+              and getattr(idx, f.name) is not None}
     save_checkpoint(str(tmp_path), 1, arrays)
     proto = jax.tree_util.tree_map(
         lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), arrays)

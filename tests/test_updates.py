@@ -1,0 +1,427 @@
+"""Mutable learned index (DESIGN.md §11): epoch-versioned updates.
+
+Property/parity contract:
+
+  - BETWEEN updates and re-fit, every query stays EXACT: counts
+    bitwise-equal a fresh ``build_index`` on the equivalent point set,
+    materialized id sets exactly equal, kNN distances bitwise-equal.
+  - AFTER ``refit_partitions`` of the touched partitions, every query
+    spec (point / range / circle / kNN / join, strict and fused, both
+    kernel backends, sharded and unsharded) is BITWISE-identical to the
+    fresh build — the re-fit compacts each touched row into exactly the
+    layout the build pipeline would produce (``build_index(vid=...)``
+    pins the id assignment).
+  - A batched update touching k of P partitions re-fits only those k
+    (epoch / refit_gen counters), re-verifying the spline error bound
+    per touched partition.
+  - Capacity growth (delta buffer) bumps ``shape_epoch`` and evicts
+    executables compiled against superseded shapes; ordinary updates
+    leave the executable cache intact (update programs cache like
+    queries, keyed by their epoch-invariant shapes).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (CircleQuery, DeleteBatch, EngineConfig, Executor,
+                        InsertBatch, Knn, PointQuery, RangeCount,
+                        RangeQuery, Refit, SpatialJoin, build_index, fit,
+                        verify_eps)
+from repro.data import spatial as ds
+
+N = 6000
+N_INS = 400
+N_DEL = 200
+
+
+@pytest.fixture(scope="module")
+def mutated():
+    """One interleaving of insert/delete applied through the executor,
+    plus the equivalent point set (original - deleted + surviving
+    inserts, in vid order) for fresh-rebuild comparison."""
+    x, y = ds.make("gaussian", N, seed=7)
+    part = fit("kdtree", x, y, 8, seed=0)
+    ex = Executor(build_index(x, y, part))
+
+    rng = np.random.default_rng(3)
+    ins_x, ins_y = ds.make("gaussian", N_INS, seed=11)
+    vids = ex.run(InsertBatch(), ins_x, ins_y)
+    assert vids.tolist() == list(range(N, N + N_INS))
+
+    del_ix = rng.choice(N, N_DEL, replace=False)
+    # delete originals AND a slice of the still-buffered inserts
+    removed = ex.run(DeleteBatch(),
+                     np.concatenate([x[del_ix], ins_x[:50]]),
+                     np.concatenate([y[del_ix], ins_y[:50]]))
+    assert removed == N_DEL + 50
+
+    keep = np.ones(N, bool)
+    keep[del_ix] = False
+    ax = np.concatenate([x[keep], ins_x[50:]])
+    ay = np.concatenate([y[keep], ins_y[50:]])
+    avid = np.concatenate([np.arange(N)[keep],
+                           np.arange(N + 50, N + N_INS)])
+    return dict(x=x, y=y, part=part, ex=ex, ax=ax, ay=ay, avid=avid,
+                ins=(ins_x, ins_y), deleted=(x[del_ix], y[del_ix]))
+
+
+def _queries(part, x, y, qn=12, seed=5):
+    rng = np.random.default_rng(seed)
+    ix = rng.integers(0, len(x), qn)
+    qx, qy = x[ix], y[ix]
+    rects = ds.random_rects(qn, 1e-3, part.bounds, seed=seed,
+                            centers=(x, y))
+    polys, ne = ds.random_polygons(6, part.bounds, seed=seed + 1)
+    r = np.full(qn, 0.03, np.float32)
+    return qx, qy, rects, polys, ne, r
+
+
+def _spec_sweep(qx, qy, rects, polys, ne, r, k=7):
+    return [
+        ("point", PointQuery(), (qx, qy)),
+        ("range_count", RangeCount(), (rects,)),
+        ("range", RangeQuery(), (rects,)),
+        ("circle", CircleQuery(), (qx, qy, r)),
+        ("circle_mat", CircleQuery(materialize=True), (qx, qy, r)),
+        ("knn", Knn(k=k), (qx, qy)),
+        ("knn_exact", Knn(k=k, mode="exact"), (qx, qy)),
+        ("join", SpatialJoin(), (polys, ne)),
+    ]
+
+
+def _assert_bitwise(got, want, ctx):
+    gl = got if isinstance(got, tuple) else (got,)
+    wl = want if isinstance(want, tuple) else (want,)
+    for a, b in zip(gl, wl):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.shape == b.shape, (ctx, a.shape, b.shape)
+        assert (a == b).all(), (ctx, a, b)
+
+
+# -- pre-refit: delta-aware scans stay exact ------------------------------
+
+def test_prerefit_counts_and_sets_match_fresh_build(mutated):
+    m = mutated
+    ex = m["ex"]
+    fresh = Executor(build_index(m["ax"], m["ay"], m["part"],
+                                 vid=m["avid"], n_pad=ex.index.n_pad))
+    qx, qy, rects, polys, ne, r = _queries(m["part"], m["x"], m["y"])
+
+    _assert_bitwise(ex.run(RangeCount(), rects),
+                    fresh.run(RangeCount(), rects), "range_count")
+    _assert_bitwise(ex.run(CircleQuery(), qx, qy, r, strict=True),
+                    fresh.run(CircleQuery(), qx, qy, r, strict=True),
+                    "circle")
+    _assert_bitwise(ex.run(SpatialJoin(), polys, ne, strict=True),
+                    fresh.run(SpatialJoin(), polys, ne, strict=True),
+                    "join")
+    # kNN: the k smallest distances are a unique multiset -> bitwise
+    gd2, _ = ex.run(Knn(k=7), qx, qy, strict=True)
+    wd2, _ = fresh.run(Knn(k=7), qx, qy, strict=True)
+    _assert_bitwise(gd2, wd2, "knn d2")
+
+    # membership: live inserts found, deleted points gone
+    ins_x, ins_y = m["ins"]
+    dx, dy = m["deleted"]
+    got = np.asarray(ex.run(PointQuery(),
+                            np.concatenate([ins_x[50:60], ins_x[:10],
+                                            dx[:10]]),
+                            np.concatenate([ins_y[50:60], ins_y[:10],
+                                            dy[:10]])))
+    assert got[:10].all()                # live buffered inserts
+    assert not got[10:].any()            # deleted inserts + originals
+
+    # materialized ranges: exact counts, exact id sets
+    gcnt, gvids, gok = ex.run(RangeQuery(), rects, strict=True)
+    wcnt, wvids, wok = fresh.run(RangeQuery(), rects, strict=True)
+    assert (np.asarray(gcnt) == np.asarray(wcnt)).all()
+    assert bool(np.asarray(gok).all()) and bool(np.asarray(wok).all())
+    for i in range(len(rects)):
+        a = {v for v in np.asarray(gvids)[i] if v >= 0}
+        b = {v for v in np.asarray(wvids)[i] if v >= 0}
+        assert a == b, i
+
+
+# -- refit: targeted, counted, eps-verified -------------------------------
+
+def test_refit_touches_only_touched_partitions(mutated):
+    m = mutated
+    ex = m["ex"]
+    idx = ex.index
+    dirty = [int(p) for p in np.nonzero(
+        (np.asarray(idx.delta_count) > 0) | (np.asarray(idx.dead) > 0))[0]]
+    assert len(dirty) >= 2
+    k = dirty[: len(dirty) // 2]
+    rest = [p for p in dirty if p not in k]
+    gen0 = np.asarray(idx.refit_gen).copy()
+    knots0 = np.asarray(idx.knot_keys).copy()
+    epoch0 = idx.epoch
+
+    touched = ex.refit(k)
+    assert sorted(touched) == sorted(k)
+    idx = ex.index
+    gen1 = np.asarray(idx.refit_gen)
+    assert (gen1[k] == gen0[k] + 1).all()
+    untouched = [p for p in range(idx.num_partitions) if p not in k]
+    assert (gen1[untouched] == gen0[untouched]).all()
+    # untouched partitions' learned model is preserved bitwise
+    assert (np.asarray(idx.knot_keys)[untouched] ==
+            knots0[untouched]).all()
+    assert idx.epoch == epoch0 + 1
+    # touched rows are clean now
+    assert (np.asarray(idx.delta_count)[k] == 0).all()
+    assert (np.asarray(idx.dead)[k] == 0).all()
+
+    # eps bound re-verified per touched partition: the re-fit spline
+    # honors the corridor's 2*eps interpolation bound (the same bound a
+    # fresh build exhibits; see mutate.verify_eps)
+    for p in touched:
+        err = verify_eps(idx, p)
+        assert err <= 2 * idx.eps + 1, (p, err)
+
+    # finish compaction for the downstream parity tests
+    ex.refit(rest)
+    assert (np.asarray(ex.index.refit_gen)[rest] == gen0[rest] + 1).all()
+
+
+# -- post-refit: bitwise parity, every spec, both modes -------------------
+
+def test_postrefit_bitwise_parity_all_specs(mutated):
+    m = mutated
+    ex = m["ex"]
+    ex.refit()        # idempotent if the previous test already ran
+    fresh = Executor(build_index(m["ax"], m["ay"], m["part"],
+                                 vid=m["avid"], n_pad=ex.index.n_pad))
+    qx, qy, rects, polys, ne, r = _queries(m["part"], m["x"], m["y"])
+    for name, spec, args in _spec_sweep(qx, qy, rects, polys, ne, r):
+        for strict in (True, False):
+            _assert_bitwise(ex.run(spec, *args, strict=strict),
+                            fresh.run(spec, *args, strict=strict),
+                            (name, strict))
+
+
+@pytest.mark.parametrize("backend", ["pallas"])
+def test_postrefit_parity_pallas_backend(backend):
+    """Reduced sweep on the pallas (interpret-mode) backend: the delta
+    probes and tombstone poisoning must be kernel-transparent."""
+    x, y = ds.make("gaussian", 2500, seed=9)
+    part = fit("kdtree", x, y, 4, seed=0)
+    cfg = EngineConfig(backend=backend)
+    ex = Executor(build_index(x, y, part), config=cfg)
+
+    ins_x, ins_y = ds.make("gaussian", 120, seed=13)
+    ex.run(InsertBatch(), ins_x, ins_y)
+    rng = np.random.default_rng(5)
+    del_ix = rng.choice(2500, 80, replace=False)
+    ex.run(DeleteBatch(), x[del_ix], y[del_ix])
+
+    keep = np.ones(2500, bool)
+    keep[del_ix] = False
+    ax = np.concatenate([x[keep], ins_x])
+    ay = np.concatenate([y[keep], ins_y])
+    avid = np.concatenate([np.arange(2500)[keep],
+                           np.arange(2500, 2620)])
+    qx, qy, rects, polys, ne, r = _queries(part, x, y, qn=6, seed=17)
+
+    # pre-refit: exact counts through the kernel scan stages
+    fresh_pre = Executor(build_index(ax, ay, part, vid=avid,
+                                     n_pad=ex.index.n_pad), config=cfg)
+    _assert_bitwise(ex.run(RangeCount(), rects),
+                    fresh_pre.run(RangeCount(), rects), "pallas rc")
+    _assert_bitwise(ex.run(CircleQuery(), qx, qy, r, strict=True),
+                    fresh_pre.run(CircleQuery(), qx, qy, r, strict=True),
+                    "pallas circle")
+    gd2, _ = ex.run(Knn(k=5), qx, qy, strict=True)
+    wd2, _ = fresh_pre.run(Knn(k=5), qx, qy, strict=True)
+    _assert_bitwise(gd2, wd2, "pallas knn")
+
+    # post-refit: bitwise on a representative subset
+    ex.refit()
+    fresh = Executor(build_index(ax, ay, part, vid=avid,
+                                 n_pad=ex.index.n_pad), config=cfg)
+    for name, spec, args in [
+            ("point", PointQuery(), (qx, qy)),
+            ("range_count", RangeCount(), (rects,)),
+            ("range", RangeQuery(), (rects,)),
+            ("circle", CircleQuery(), (qx, qy, r)),
+            ("knn", Knn(k=5), (qx, qy))]:
+        _assert_bitwise(ex.run(spec, *args, strict=True),
+                        fresh.run(spec, *args, strict=True),
+                        ("pallas", name))
+
+
+# -- executable-cache semantics across updates ----------------------------
+
+def test_update_executables_cache_like_queries():
+    x, y = ds.make("gaussian", 3000, seed=21)
+    part = fit("kdtree", x, y, 4, seed=0)
+    ex = Executor(build_index(x, y, part, delta_cap=512))
+    b1x, b1y = ds.make("gaussian", 64, seed=22)
+    b2x, b2y = ds.make("gaussian", 64, seed=23)
+    ex.run(InsertBatch(), b1x, b1y)
+    n0 = ex.stats()["cache_size"]
+    keys0 = set(ex.cache_keys())
+    ex.run(InsertBatch(), b2x, b2y)    # same shapes: cached executable
+    assert ex.stats()["cache_size"] == n0
+    assert set(ex.cache_keys()) == keys0
+    assert any(k[3] == "u" and k[2] == ("insert",)
+               for k in ex.cache_keys())
+
+
+def test_capacity_growth_bumps_shape_epoch_and_evicts_stale():
+    x, y = ds.make("gaussian", 3000, seed=25)
+    part = fit("kdtree", x, y, 4, seed=0)
+    ex = Executor(build_index(x, y, part),
+                  config=EngineConfig(delta_cap=64))
+    rects = ds.random_rects(8, 1e-3, part.bounds, seed=26,
+                            centers=(x, y))
+    ex.run(RangeCount(), rects)        # warm a query executable
+    se0 = ex.index.shape_epoch
+    assert all(k[5] == se0 for k in ex.cache_keys())
+
+    bx, by = ds.make("gaussian", 300, seed=27)
+    ex.run(InsertBatch(), bx, by)      # overflows delta_cap=64 -> grow
+    assert ex.index.shape_epoch > se0
+    # the stale-epoch sweep leaves NO executable from the old shapes
+    assert all(k[5] == ex.index.shape_epoch for k in ex.cache_keys())
+    # and queries recompile + stay exact against a fresh build
+    fresh = Executor(build_index(
+        np.concatenate([x, bx]), np.concatenate([y, by]), part,
+        n_pad=ex.index.n_pad))
+    _assert_bitwise(ex.run(RangeCount(), rects),
+                    fresh.run(RangeCount(), rects), "post-growth")
+
+
+def test_epoch_counters_track_updates():
+    x, y = ds.make("gaussian", 2000, seed=31)
+    part = fit("kdtree", x, y, 4, seed=0)
+    ex = Executor(build_index(x, y, part, delta_cap=128))
+    assert ex.index.epoch == 0
+    bx, by = ds.make("gaussian", 32, seed=32)
+    ex.run(InsertBatch(), bx, by)
+    assert ex.index.epoch == 1
+    ex.run(DeleteBatch(), bx[:8], by[:8])
+    assert ex.index.epoch == 2
+    ex.run(Refit())
+    assert ex.index.epoch == 3
+    st = ex.stats()
+    assert st["updates"] == 2 and st["refits"] == 1
+
+
+def test_out_of_domain_inserts_visible_to_all_queries():
+    """Inserts outside the build-time bounds land in the overflow grid;
+    its box must widen so the global filter (range/circle/kNN candidate
+    selection) can see them — not just the point probe."""
+    x, y = ds.make("gaussian", 2000, seed=51)
+    part = fit("kdtree", x, y, 4, seed=0)
+    ex = Executor(build_index(x, y, part, delta_cap=64))
+    ox = np.asarray([5.0, 5.1], np.float32)
+    oy = np.asarray([5.0, 5.1], np.float32)
+    ex.run(InsertBatch(), ox, oy)
+    rect = np.asarray([[4.9, 4.9, 5.2, 5.2]], np.float32)
+    assert np.asarray(ex.run(PointQuery(), ox, oy)).all()
+    assert int(ex.run(RangeCount(), rect)[0]) == 2          # pre-refit
+    cnt = ex.run(CircleQuery(), ox[:1], oy[:1],
+                 np.asarray([0.5], np.float32), strict=True)
+    assert int(np.asarray(cnt)[0]) == 2
+    d2, vid = ex.run(Knn(k=2), ox[:1], oy[:1], strict=True)
+    assert set(np.asarray(vid)[0]) == {2000, 2001}
+    ex.refit()
+    assert int(ex.run(RangeCount(), rect)[0]) == 2          # post-refit
+    assert np.asarray(ex.run(PointQuery(), ox, oy)).all()
+
+
+# -- serving path: occupancy-triggered deferred compaction ----------------
+
+def test_serve_session_mutations_and_maintain_refit():
+    from repro.serve.spatial import SpatialServeSession
+    x, y = ds.make("gaussian", 2000, seed=41)
+    part = fit("kdtree", x, y, 4, seed=0)
+    sess = SpatialServeSession(
+        build_index(x, y, part),
+        config=EngineConfig(delta_cap=64, delta_occupancy=0.01))
+    rects = ds.random_rects(6, 1e-3, part.bounds, seed=42,
+                            centers=(x, y))
+    sess.submit(RangeCount(), rects)
+    bx, by = ds.make("gaussian", 100, seed=43)
+    sess.insert(bx, by)
+    # tiny occupancy threshold: the insert scheduled a deferred re-fit
+    assert sess.stats()["pending_refit"]
+    moved = sess.maintain()
+    assert moved.get("refit")
+    assert not sess.stats()["pending_refit"]
+    assert sess.executor.refits == 1
+    # post-compaction results bitwise match a fresh build
+    fresh = Executor(build_index(
+        np.concatenate([x, bx]), np.concatenate([y, by]), part,
+        n_pad=sess.executor.index.n_pad))
+    _assert_bitwise(sess.submit(RangeCount(), rects),
+                    fresh.run(RangeCount(), rects), "serve")
+    removed = sess.delete(bx[:5], by[:5])
+    assert removed == 5
+
+
+# -- sharded executors: updates + parity under a mesh ---------------------
+
+SHARDED = r"""
+import numpy as np, jax
+from repro.core import *
+from repro.data import spatial as ds
+
+mesh = jax.make_mesh((2, 2), ("data", "query"))
+x, y = ds.make("taxi", 8000, seed=2)
+part = fit("kdtree", x, y, 8)
+idx = build_index(x, y, part)
+
+plain = Executor(idx)
+qex = Executor(idx, mesh=mesh, part_axis="data", query_axis="query",
+               config=EngineConfig(query_shard_threshold=16))
+
+bx, by = ds.make("taxi", 200, seed=9)
+for ex in (plain, qex):
+    ex.run(InsertBatch(), bx, by)
+    ex.run(DeleteBatch(), x[:100], y[:100])
+
+rng = np.random.default_rng(0)
+n_q = 42   # above threshold AND not a query-axis multiple (padding)
+ix = rng.integers(0, len(x), n_q)
+qx, qy = x[ix], y[ix]
+rects = ds.random_rects(n_q, 1e-3, part.bounds, seed=3, centers=(x, y))
+
+def check(tag):
+    for spec, args in ((PointQuery(), (qx, qy)),
+                       (RangeCount(), (rects,)),
+                       (RangeQuery(), (rects,)),
+                       (Knn(k=5), (qx, qy))):
+        w = plain.run(spec, *args, strict=True)
+        g = qex.run(spec, *args, strict=True)
+        wl = w if isinstance(w, tuple) else (w,)
+        gl = g if isinstance(g, tuple) else (g,)
+        for a, b in zip(wl, gl):
+            assert (np.asarray(a) == np.asarray(b)).all(), (tag, spec)
+
+check("pre-refit")
+assert [k for k in qex.cache_keys() if k[1]], "expected qshard variants"
+for ex in (plain, qex):
+    ex.refit()
+check("post-refit")
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_updates_match_unsharded():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=4")
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", SHARDED], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout

@@ -47,6 +47,13 @@ for backend, br in sorted(rep["backends"].items()):
         print(f"  {name:12s} cold {s['cold_us_per_q']:9.1f} us/q   "
               f"steady {s['steady_us_per_q']:9.1f} us/q   "
               f"syncs {s['steady_host_syncs']}{wide_s}")
+    u = br.get("updates")
+    if u:
+        print(f"  {'updates':12s} insert {u['insert_us_per_op']:7.1f} "
+              f"us/op ({u['inserts_per_s']}/s)   refit "
+              f"{u['refit_ms']:.1f} ms/{u['refit_partitions']}p   "
+              f"post range {u['post_range_us_per_q']:.1f} us/q   "
+              f"post circle {u['post_circle_us_per_q']:.1f} us/q")
 assert not bad, f"steady-state host syncs detected: {bad}"
 print("OK: all specs zero-sync in steady state (every backend)")
 
@@ -83,6 +90,20 @@ for backend, br in sorted(rep["backends"].items()):
             if pct > budget:
                 regressions.append((backend, name, label.strip(), old,
                                     new, round(pct, 1)))
+    # update-throughput columns ride the same regression table
+    u, bu = br.get("updates"), bb.get("updates")
+    for key in ("insert_us_per_op", "post_range_us_per_q",
+                "post_circle_us_per_q"):
+        if not (u and bu) or key not in u or key not in bu:
+            continue
+        old, new = bu[key], u[key]
+        pct = (new - old) / max(old, 1e-9) * 100
+        flag = " <-- REGRESSION" if pct > budget else ""
+        print(f"    {'updates':12s} {key:20s} {old:9.1f} -> "
+              f"{new:9.1f} ({pct:+6.1f}%){flag}")
+        if pct > budget:
+            regressions.append((backend, "updates", key, old, new,
+                                round(pct, 1)))
 assert not regressions, (
     f"steady-state us/q regressed >{budget}% vs committed "
     f"BENCH_quick.json: {regressions}")
