@@ -173,9 +173,13 @@ def main():
     report = {"bench_n": BENCH_N, "bench_q": q, "bench_q_wide": q2,
               "build_ms": build_ms,
               "backend_default": default, "backends": {}}
+    from benchmarks.traffic import bench_serve
     for backend in order:
         out = bench_backend(index, backend, workload, workload256)
         out["updates"] = bench_updates(index, x, y, backend, workload)
+        # serve column: scheduler-coalesced vs serial throughput, mixed
+        # read/write latency, idle-only maintenance (benchmarks/traffic.py)
+        out["serve"] = bench_serve(index, x, y, part, backend)
         report["backends"][backend] = out
     # back-compat view: the default backend is the serving configuration
     # whose trajectory the CI regression gate tracks

@@ -26,6 +26,10 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode: tiny sizes, all QuerySpecs, "
                          "emit BENCH_quick.json")
+    ap.add_argument("--traffic", action="store_true",
+                    help="mixed read/write traffic through the serve "
+                         "scheduler only (coalesced vs serial qps, "
+                         "p50/p99 latency, ingest ops/s)")
     ap.add_argument("--crossover", action="store_true",
                     help="measure the query_shard_threshold crossover "
                          "(sharded vs unsharded) and record the pick "
@@ -45,6 +49,9 @@ def main() -> None:
         os.environ.setdefault("BENCH_Q", "16")
         os.environ.setdefault("BENCH_REPEAT", "1")
         picked = ["quick"]
+    elif args.traffic:
+        os.environ.setdefault("BENCH_N", "20000")
+        picked = ["traffic"]
     elif args.crossover:
         # multi-device host platform BEFORE jax initializes
         os.environ.setdefault("BENCH_N", "20000")

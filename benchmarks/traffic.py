@@ -1,0 +1,240 @@
+"""Mixed read/write traffic benchmark: the streaming serve scheduler.
+
+The millions-of-users traffic shape (ROADMAP open item 1, now closed):
+many small concurrent point/range/circle/kNN requests plus a live
+ingest stream of inserts/deletes, served through the scheduler front
+door (serve/scheduler.py, DESIGN.md §12). Two phases per backend:
+
+  throughput  the SAME request sequence through serial ``submit()``
+              (call-and-wait, one dispatch per request) and through
+              the scheduler's deterministic drain (coalesced
+              micro-batches) — queries/s both ways, results compared
+              BITWISE per request. The acceptance bar: coalesced
+              throughput >= serial throughput, zero result drift.
+  mixed       closed-loop client threads issuing single-query reads
+              against a live worker-thread scheduler while an ingest
+              thread streams InsertBatch/DeleteBatch through the same
+              queue — p50/p99 request latency, queries/s, ingest
+              ops/s, and the off-hot-path maintenance observation
+              (``maintain_busy`` must stay 0: maintain() only ever ran
+              with an empty queue).
+
+``bench_serve(...)`` returns the dict the quick bench commits as the
+``serve`` column of BENCH_quick.json; ``tools/check.sh`` gates p50/qps
+under the standard 25% regression table (SKIP_BENCH_DIFF honored) and
+hard-asserts the deterministic invariants (bitwise parity, idle-only
+maintenance).
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import BENCH_N, emit
+from repro.core import (CircleQuery, DeleteBatch, EngineConfig,
+                        InsertBatch, Knn, PointQuery, RangeCount,
+                        RangeQuery, build_index, fit)
+from repro.data import spatial as ds
+from repro.serve import SpatialServeSession
+
+READ_REQS = 192          # phase-1 requests (mixed widths 1..3)
+MIXED_READS = 128        # phase-2 closed-loop single-query reads
+CLIENTS = 4
+INGEST_BATCH = 64
+INGEST_ROUNDS = 6
+
+
+def _tree_equal(a, b) -> bool:
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.array_equal(np.asarray(u), np.asarray(v))
+               for u, v in zip(la, lb))
+
+
+def _traffic(x, y, part, n_req, seed, widths=(1, 2, 3)):
+    """A mixed request sequence: small batches over 5 read specs."""
+    rng = np.random.default_rng(seed)
+    rects = ds.random_rects(n_req * 3, 1e-4, part.bounds,
+                            seed=seed + 1, centers=(x, y))
+    reqs = []
+    for i in range(n_req):
+        w = widths[i % len(widths)]
+        ix = rng.integers(0, len(x), w)
+        qx, qy = x[ix], y[ix]
+        kind = i % 5
+        if kind == 0:
+            reqs.append((PointQuery(), qx, qy))
+        elif kind == 1:
+            reqs.append((RangeCount(), rects[3 * i:3 * i + w]))
+        elif kind == 2:
+            reqs.append((RangeQuery(), rects[3 * i:3 * i + w]))
+        elif kind == 3:
+            reqs.append((CircleQuery(), qx, qy,
+                         np.full(w, 0.02, np.float32)))
+        else:
+            reqs.append((Knn(k=10), qx, qy))
+    return reqs
+
+
+def bench_serve(index, x, y, part, backend: str) -> dict:
+    # delta capacity covers the whole ingest stream so the mixed phase
+    # measures steady dispatch, not a mid-run buffer-growth recompile
+    cfg = EngineConfig(backend=backend,
+                       delta_cap=2 * INGEST_ROUNDS * INGEST_BATCH)
+    session = SpatialServeSession(index, config=cfg)
+    warm = _traffic(x, y, part, 10, seed=90)
+    session.warmup(warm)
+
+    # ---- phase 1: serial vs coalesced throughput, bitwise parity ----
+    reqs = _traffic(x, y, part, READ_REQS, seed=91)
+    n_queries = sum(r[1].shape[0] for r in reqs)
+    # settle width-specific executables for BOTH modes off the clock:
+    # serial compiles per arrival width, the scheduler per power-of-two
+    # bucket — one untimed pass each over an identically-shaped warmup
+    # traffic leaves only steady-state dispatch on the clock
+    warm2 = _traffic(x, y, part, READ_REQS, seed=92)
+    for spec, *args in warm2:
+        session.submit(spec, *args)
+    sched = session.scheduler(start=False)
+    for spec, *args in warm2:
+        sched.submit(spec, *args)
+    sched.drain()
+
+    t0 = time.perf_counter()
+    serial = [session.submit(spec, *args) for spec, *args in reqs]
+    jax.block_until_ready(serial)
+    dt_serial = time.perf_counter() - t0
+    serial_qps = n_queries / dt_serial
+
+    tickets = [sched.submit(spec, *args) for spec, *args in reqs]
+    t0 = time.perf_counter()
+    sched.drain()
+    dt_sched = time.perf_counter() - t0
+    qps = n_queries / dt_sched
+    bitwise = all(_tree_equal(t.result(), ref)
+                  for t, ref in zip(tickets, serial))
+    st1 = sched.stats()
+    sched.close()
+
+    # ---- phase 2: concurrent clients + ingest stream (worker mode) --
+    lat_us = []
+    lat_lock = threading.Lock()
+    ingest_ops = 0
+    with session.scheduler(start=True) as live:
+        rng = np.random.default_rng(93)
+        bx = np.repeat(x, 2)[:INGEST_ROUNDS * INGEST_BATCH] \
+            + rng.normal(0, 1e-4, INGEST_ROUNDS * INGEST_BATCH)
+        by = np.repeat(y, 2)[:INGEST_ROUNDS * INGEST_BATCH] \
+            + rng.normal(0, 1e-4, INGEST_ROUNDS * INGEST_BATCH)
+        bx, by = bx.astype(np.float32), by.astype(np.float32)
+        # prewarm the update executables (batch-width keyed)
+        live.submit(InsertBatch(), bx[:INGEST_BATCH],
+                    by[:INGEST_BATCH]).result(120.0)
+        live.submit(DeleteBatch(), bx[:8], by[:8]).result(120.0)
+
+        reads = _traffic(x, y, part, MIXED_READS, seed=94, widths=(1,))
+        # untimed concurrent warm pass: the timed phase's reads arrive
+        # concurrently and coalesce into power-of-two buckets the
+        # serial/drain warmups never shaped — compile those off the
+        # clock so p99 measures dispatch, not first-bucket compiles
+        def _warm_client(k, rs):
+            for i in range(k, len(rs), CLIENTS):
+                spec, *args = rs[i]
+                live.submit(spec, *args).result(120.0)
+        for rs in (reads, reads):
+            ws = [threading.Thread(target=_warm_client, args=(k, rs))
+                  for k in range(CLIENTS)]
+            for w in ws:
+                w.start()
+            for w in ws:
+                w.join()
+        done = threading.Event()
+
+        def ingest():
+            nonlocal ingest_ops
+            i = 1
+            while not done.is_set() and i < INGEST_ROUNDS:
+                lo = i * INGEST_BATCH
+                tw = live.submit(InsertBatch(), bx[lo:lo + INGEST_BATCH],
+                                 by[lo:lo + INGEST_BATCH])
+                tw.result(120.0)
+                ingest_ops += INGEST_BATCH
+                td = live.submit(DeleteBatch(), bx[lo:lo + 8],
+                                 by[lo:lo + 8])
+                td.result(120.0)
+                ingest_ops += 8
+                i += 1
+
+        def client(k):
+            mine = []
+            for i in range(k, len(reads), CLIENTS):
+                spec, *args = reads[i]
+                t0 = time.perf_counter()
+                live.submit(spec, *args).result(120.0)
+                mine.append((time.perf_counter() - t0) * 1e6)
+            with lat_lock:
+                lat_us.extend(mine)
+
+        t0 = time.perf_counter()
+        ing = threading.Thread(target=ingest)
+        cls = [threading.Thread(target=client, args=(k,))
+               for k in range(CLIENTS)]
+        ing.start()
+        for c in cls:
+            c.start()
+        for c in cls:
+            c.join()
+        done.set()
+        ing.join()
+        wall = time.perf_counter() - t0
+        live.drain()
+        # idle now: give the worker one beat to run deferred maintain()
+        for _ in range(200):
+            if live.stats()["maintain_runs"] > 0:
+                break
+            time.sleep(0.005)
+        st2 = live.stats()
+
+    out = {
+        "reads": READ_REQS,
+        "queries": int(n_queries),
+        "serial_qps": round(serial_qps, 1),
+        "qps": round(qps, 1),
+        "coalesce_speedup": round(qps / max(serial_qps, 1e-9), 2),
+        "bitwise_vs_serial": bool(bitwise),
+        "mean_batch": st1["mean_batch"],
+        "max_batch": st1["max_batch"],
+        "clients": CLIENTS,
+        "p50_us": round(float(np.percentile(lat_us, 50)), 1),
+        "p99_us": round(float(np.percentile(lat_us, 99)), 1),
+        "mixed_read_qps": round(len(lat_us) / wall, 1),
+        "ingest_ops_per_s": round(ingest_ops / wall, 1),
+        "maintain_runs": st2["maintain_runs"],
+        "maintain_busy": st2["maintain_busy"],
+        "write_merges": st2["write_merges"],
+    }
+    emit(f"traffic/{backend}/serial_qps", 1e6 / max(serial_qps, 1e-9))
+    emit(f"traffic/{backend}/sched_qps", 1e6 / max(qps, 1e-9))
+    emit(f"traffic/{backend}/p50_us", out["p50_us"])
+    emit(f"traffic/{backend}/p99_us", out["p99_us"])
+    return out
+
+
+def main():
+    x, y = ds.make("taxi", BENCH_N, seed=0)
+    part = fit("kdtree", x, y, min(16, BENCH_N // 256 or 1), seed=0)
+    index = build_index(x, y, part)
+    jax.block_until_ready(index.key)
+    report = {}
+    for backend in ("xla", "pallas"):
+        report[backend] = bench_serve(index, x, y, part, backend)
+    print(json.dumps(report, indent=2, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -48,7 +48,7 @@ class SpatialEngine:
 
     def __init__(self, index: LearnedSpatialIndex, mesh: Optional[Mesh] = None,
                  part_axis: str = "data", query_axis: Optional[str] = None,
-                 config: EngineConfig = EngineConfig()):
+                 config: Optional[EngineConfig] = None):
         self.executor = Executor(index, mesh=mesh, part_axis=part_axis,
                                  query_axis=query_axis, config=config)
 

@@ -36,6 +36,7 @@ ride the zero-sync steady path.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from functools import partial
 from typing import Callable, Optional, Tuple
 
@@ -108,12 +109,15 @@ class Executor:
     def __init__(self, index: LearnedSpatialIndex,
                  mesh: Optional[Mesh] = None, part_axis: str = "data",
                  query_axis: Optional[str] = None,
-                 config: EngineConfig = EngineConfig()):
+                 config: Optional[EngineConfig] = None):
         self.mesh = mesh
         self.part_axis = part_axis
         self.query_axis = query_axis
-        self.cfg = config
-        self.backend = resolve_backend(config.backend)
+        # None sentinel, not a default EngineConfig() in the signature:
+        # a signature default is evaluated ONCE at import and then
+        # shared by every caller
+        self.cfg = config if config is not None else EngineConfig()
+        self.backend = resolve_backend(self.cfg.backend)
         if query_axis is not None:
             if mesh is None:
                 raise ValueError("query_axis requires a mesh")
@@ -123,9 +127,9 @@ class Executor:
                     f"query_axis overlaps part_axis: {sorted(bad)}")
         if mesh is not None:
             shards = int(np.prod([mesh.shape[a] for a in _axes(part_axis)]))
-            index = L.pad_partitions(index, shards * config.part_chunk)
+            index = L.pad_partitions(index, shards * self.cfg.part_chunk)
         else:
-            index = L.pad_partitions(index, config.part_chunk)
+            index = L.pad_partitions(index, self.cfg.part_chunk)
         self.index = index
         self.parts = L.part_arrays(index)
         self.bounds = index.part_bounds          # (P, 4) replicated
@@ -158,6 +162,11 @@ class Executor:
         self._demote_backoff = {}  # sticky_key -> streak multiplier
         self.host_syncs = 0   # counted bool(jnp.all(...)) blocking reads
         self.dispatches = 0   # compiled-program launches
+        # serializes run/maintain/refit so the serve scheduler's worker
+        # thread and direct session.submit callers can share one
+        # executor (executable cache, sticky state, index swap) safely;
+        # reentrant because run(Refit) and maintain() call refit()
+        self._lock = threading.RLock()
 
     # -- compilation + executable cache ----------------------------------
 
@@ -303,6 +312,21 @@ class Executor:
                 "updates": self.updates,
                 "refits": self.refits,
                 "pending_refit": sorted(self._refit_pending)}
+
+    @property
+    def epoch(self) -> int:
+        """Mutation epoch of the resident index — the read-your-writes
+        barrier token the serve scheduler stamps on request tickets
+        (a read dispatched after a write sees an epoch >= the write's).
+        """
+        return self.index.epoch
+
+    def maintenance_due(self) -> bool:
+        """Deferred maintain() work waiting? (stashed ok flags from
+        zero-sync runs, or occupancy-scheduled compactions) — the serve
+        scheduler polls this at queue-idle time so maintenance never
+        rides the hot path."""
+        return bool(self._pending) or bool(self._refit_pending)
 
     # -- mutable-index state management (DESIGN.md §11) ------------------
 
@@ -450,7 +474,11 @@ class Executor:
         """Compaction + per-partition spline re-fit (mutate.refit_
         partitions): merge delta buffers, drop tombstones, re-fit ONLY
         the given partitions (default: every dirty one). Returns the
-        list of partition ids re-fit."""
+        list of partition ids re-fit. Thread-safe."""
+        with self._lock:
+            return self._refit_locked(touched)
+
+    def _refit_locked(self, touched=None):
         idx = self.index
         if idx.delta_count is None:
             return []
@@ -490,7 +518,12 @@ class Executor:
         steady-state serving rate-limits ping-pong compiles without
         ever disabling downward re-tuning for good. Returns
         {sticky_key: new (cap, cand)} for the tiers that moved.
+        Thread-safe (the serve scheduler runs this at queue-idle time).
         """
+        with self._lock:
+            return self._maintain_locked()
+
+    def _maintain_locked(self) -> dict:
         moved = {}
         for base, (tier, ok) in list(self._pending.items()):
             del self._pending[base]
@@ -536,30 +569,35 @@ class Executor:
     # -- public entry points ---------------------------------------------
 
     def run(self, spec: QuerySpec, *args, strict: bool = False):
-        """Execute one QuerySpec. See class docstring for ``strict``."""
+        """Execute one QuerySpec. See class docstring for ``strict``.
+
+        Thread-safe: the executor lock serializes dispatch (executable
+        cache, sticky state, index swap) so the serve scheduler's
+        worker and direct callers can share one executor."""
         if not isinstance(spec, QuerySpec):
             raise TypeError(f"expected a QuerySpec, got {spec!r}")
         if len(args) != spec.n_args:
             raise TypeError(f"{type(spec).__name__} takes {spec.n_args} "
                             f"data arguments, got {len(args)}")
-        if isinstance(spec, InsertBatch):
-            return self._run_insert(args)
-        if isinstance(spec, DeleteBatch):
-            return self._run_delete(args)
-        if isinstance(spec, Refit):
-            return self.refit()
-        if isinstance(spec, PointQuery):
-            return self._run_point(args)
-        if isinstance(spec, RangeCount):
-            return self._run_range_count(args)
-        if isinstance(spec, RangeQuery):
-            return self._run_range(spec, args, strict)
-        if isinstance(spec, CircleQuery):
-            return self._run_circle(spec, args, strict)
-        if isinstance(spec, Knn):
-            return self._run_knn(spec, args, strict)
-        if isinstance(spec, SpatialJoin):
-            return self._run_join(spec, args, strict)
+        with self._lock:
+            if isinstance(spec, InsertBatch):
+                return self._run_insert(args)
+            if isinstance(spec, DeleteBatch):
+                return self._run_delete(args)
+            if isinstance(spec, Refit):
+                return self.refit()
+            if isinstance(spec, PointQuery):
+                return self._run_point(args)
+            if isinstance(spec, RangeCount):
+                return self._run_range_count(args)
+            if isinstance(spec, RangeQuery):
+                return self._run_range(spec, args, strict)
+            if isinstance(spec, CircleQuery):
+                return self._run_circle(spec, args, strict)
+            if isinstance(spec, Knn):
+                return self._run_knn(spec, args, strict)
+            if isinstance(spec, SpatialJoin):
+                return self._run_join(spec, args, strict)
         raise TypeError(f"unknown QuerySpec: {spec!r}")
 
     def run_batch(self, requests, strict: bool = False) -> list:

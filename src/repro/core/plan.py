@@ -50,6 +50,17 @@ class EngineConfig:
     delta_occupancy: float = 0.5  # (buffered + tombstoned) / live
                                   # fraction above which the executor
                                   # schedules a deferred re-fit
+    # -- streaming serve scheduler knobs (serve/scheduler.py, §12) ----
+    serve_max_batch: int = 256   # micro-batch coalescing cap (per-spec
+                                 # caps from BENCH_quick.json wide-batch
+                                 # columns clamp below this)
+    serve_coalesce_us: int = 200  # straggler wait once a partial batch
+                                  # exists (worker mode only; the
+                                  # manual test mode never waits)
+    serve_queue_depth: int = 4096  # backpressure bound: submit() blocks
+                                   # while the queue is this deep
+    serve_idle_maintain: bool = True  # run maintain() when the queue
+                                      # drains (never between requests)
 
 
 def exec_key(backend: str, base: Tuple, tag: str = "x",

@@ -8,6 +8,11 @@ Spatial query serving (mixed QuerySpec workload through the unified
 adaptive executor — the paper's decision-analysis scenario):
 
 ``python -m repro.launch.serve --spatial --n 200000 --rounds 8``
+
+Add ``--scheduler`` to serve the same workload through the streaming
+front door (serve/scheduler.py, DESIGN.md §12): concurrent client
+threads submitting single-query requests plus an insert stream, a
+worker thread coalescing them into micro-batches, maintenance at idle.
 """
 from __future__ import annotations
 
@@ -36,6 +41,87 @@ def run_lm(args):
     print(f"generated {out.shape} tokens in {dt:.2f}s "
           f"({n / dt:.1f} tok/s)")
     print(out[:, :16])
+
+
+def run_spatial_scheduler(args):
+    """Concurrent traffic through the scheduler front door."""
+    import threading
+
+    import numpy as np
+
+    from repro.core import (CircleQuery, EngineConfig, InsertBatch, Knn,
+                            PointQuery, RangeCount, build_index, fit)
+    from repro.data import spatial as ds
+    from repro.serve import SpatialServeSession
+
+    print(f"building index over {args.n} points ...")
+    x, y = ds.make("taxi", args.n, seed=0)
+    part = fit("kdtree", x, y, 64, seed=0)
+    session = SpatialServeSession(
+        build_index(x, y, part),
+        config=EngineConfig(backend=args.backend))
+    print(f"backend={session.stats()['backend']}")
+
+    rng = np.random.default_rng(1)
+    n_req = args.rounds * args.batch
+    rects = ds.random_rects(n_req, 1e-5, part.bounds, seed=2,
+                            centers=(x, y))
+    reqs = []
+    for i in range(n_req):
+        j = int(rng.integers(0, args.n))
+        kind = i % 4
+        if kind == 0:
+            reqs.append((PointQuery(), x[j:j + 1], y[j:j + 1]))
+        elif kind == 1:
+            reqs.append((RangeCount(), rects[i:i + 1]))
+        elif kind == 2:
+            reqs.append((Knn(k=10), x[j:j + 1], y[j:j + 1]))
+        else:
+            reqs.append((CircleQuery(), x[j:j + 1], y[j:j + 1],
+                         np.full(1, 0.02, np.float32)))
+    print("warmup (compilation + sticky tiers settle off the hot path)")
+    session.warmup([(s, *a) for s, *a in reqs[:4]])
+
+    lat_us = []
+    lock = threading.Lock()
+    with session.scheduler() as sched:
+        bx = (x[:args.batch] + 1e-4).astype(np.float32)
+        by = (y[:args.batch] + 1e-4).astype(np.float32)
+        sched.submit(InsertBatch(), bx, by).result(120.0)  # prewarm
+
+        def client(k, nc=8):
+            mine = []
+            for i in range(k, len(reqs), nc):
+                spec, *a = reqs[i]
+                t0 = time.perf_counter()
+                sched.submit(spec, *a).result(120.0)
+                mine.append((time.perf_counter() - t0) * 1e6)
+            with lock:
+                lat_us.extend(mine)
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=client, args=(k,))
+                   for k in range(8)]
+        ing = threading.Thread(
+            target=lambda: sched.submit(InsertBatch(), bx, by)
+            .result(120.0))
+        ing.start()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        ing.join()
+        wall = time.perf_counter() - t0
+        sched.drain()
+        st = sched.stats()
+    lat = np.asarray(lat_us)
+    print(f"{len(reqs)} requests from 8 clients in {wall:.2f}s "
+          f"({len(reqs) / wall:.0f} req/s)")
+    print(f"p50 {np.percentile(lat, 50):,.0f} us   "
+          f"p99 {np.percentile(lat, 99):,.0f} us   "
+          f"mean batch {st['mean_batch']}   max {st['max_batch']}   "
+          f"maintain {st['maintain_runs']} runs "
+          f"({st['maintain_busy']} busy)")
 
 
 def run_spatial(args):
@@ -96,6 +182,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--spatial", action="store_true",
                     help="serve mixed spatial QuerySpecs instead of an LM")
+    ap.add_argument("--scheduler", action="store_true",
+                    help="with --spatial: serve through the streaming "
+                         "scheduler (concurrent clients, coalesced "
+                         "micro-batches, idle maintenance)")
     ap.add_argument("--arch")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=None,
@@ -112,7 +202,10 @@ def main():
     if args.spatial:
         if args.batch is None:
             args.batch = 64
-        run_spatial(args)
+        if args.scheduler:
+            run_spatial_scheduler(args)
+        else:
+            run_spatial(args)
     else:
         if not args.arch:
             ap.error("--arch is required unless --spatial")

@@ -2,3 +2,6 @@ from repro.serve.api import (  # noqa: F401
     make_prefill, make_decode, generate, ServeSession,
 )
 from repro.serve.spatial import SpatialServeSession  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    SpatialScheduler, Ticket, micro_batch_caps,
+)

@@ -33,9 +33,23 @@ class SpatialServeSession:
     def __init__(self, index: LearnedSpatialIndex,
                  mesh: Optional[Mesh] = None, part_axis: str = "data",
                  query_axis: Optional[str] = None,
-                 config: EngineConfig = EngineConfig()):
+                 config: Optional[EngineConfig] = None):
+        # config defaults via a None sentinel: ``config=EngineConfig()``
+        # in the signature would be evaluated ONCE at import and shared
+        # by every session thereafter
         self.executor = Executor(index, mesh=mesh, part_axis=part_axis,
                                  query_axis=query_axis, config=config)
+
+    def scheduler(self, bench=None, start: bool = True):
+        """The streaming front door (serve/scheduler.py, DESIGN.md
+        §12): a request queue + background worker coalescing concurrent
+        submissions into micro-batches over THIS session's executor,
+        with write barriers and idle-time maintain(). ``bench`` is a
+        BENCH_quick.json path or dict for the per-spec batch caps
+        (default: the committed file); ``start=False`` skips the worker
+        thread — callers pump ``drain()`` (deterministic test mode)."""
+        from repro.serve.scheduler import SpatialScheduler
+        return SpatialScheduler(self.executor, bench=bench, start=start)
 
     def warmup(self, requests: Sequence[Tuple]) -> None:
         """Run representative requests before traffic arrives.

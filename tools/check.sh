@@ -54,8 +54,32 @@ for backend, br in sorted(rep["backends"].items()):
               f"{u['refit_ms']:.1f} ms/{u['refit_partitions']}p   "
               f"post range {u['post_range_us_per_q']:.1f} us/q   "
               f"post circle {u['post_circle_us_per_q']:.1f} us/q")
+    sv = br.get("serve")
+    if sv:
+        print(f"  {'serve':12s} sched {sv['qps']:9.1f} q/s vs serial "
+              f"{sv['serial_qps']:9.1f} q/s (x{sv['coalesce_speedup']})"
+              f"   mean batch {sv['mean_batch']}")
+        print(f"  {'':12s} mixed p50 {sv['p50_us']:9.1f} us  p99 "
+              f"{sv['p99_us']:9.1f} us   ingest "
+              f"{sv['ingest_ops_per_s']:.0f} ops/s   maintain "
+              f"{sv['maintain_runs']} runs ({sv['maintain_busy']} busy)")
 assert not bad, f"steady-state host syncs detected: {bad}"
 print("OK: all specs zero-sync in steady state (every backend)")
+
+# -- serve scheduler invariants: deterministic, so gated ALWAYS ------
+# (timing-free: coalescing must never change a bit, and maintain()
+# must only ever have run against an empty queue)
+for backend, br in sorted(rep["backends"].items()):
+    sv = br.get("serve")
+    if not sv:
+        continue
+    assert sv["bitwise_vs_serial"], (
+        f"{backend}: scheduler-coalesced results diverged from serial "
+        "submit() — batching must be bitwise-neutral")
+    assert sv["maintain_busy"] == 0, (
+        f"{backend}: maintain() ran {sv['maintain_busy']}x with a "
+        "non-empty queue — maintenance must stay off the hot path")
+print("OK: serve scheduler bitwise-neutral, maintenance idle-only")
 
 # -- perf-trajectory gate: BOTH backends' steady us/q vs committed --
 # (per-spec delta table so a regression names the backend AND spec)
@@ -104,6 +128,26 @@ for backend, br in sorted(rep["backends"].items()):
         if pct > budget:
             regressions.append((backend, "updates", key, old, new,
                                 round(pct, 1)))
+    # serve-scheduler columns: p50 latency (higher = worse) and
+    # coalesced qps (lower = worse, so the delta sign is inverted)
+    sv, bsv = br.get("serve"), bb.get("serve")
+    if sv and bsv:
+        for key, invert in (("p50_us", False), ("qps", True)):
+            if key not in sv or key not in bsv:
+                continue
+            old, new = bsv[key], sv[key]
+            pct = (old - new if invert else new - old) \
+                / max(old, 1e-9) * 100
+            flag = " <-- REGRESSION" if pct > budget else ""
+            print(f"    {'serve':12s} {key:20s} {old:9.1f} -> "
+                  f"{new:9.1f} ({pct:+6.1f}%){flag}")
+            if pct > budget:
+                regressions.append((backend, "serve", key, old, new,
+                                    round(pct, 1)))
+        # the acceptance bar: coalescing must not LOSE throughput
+        if sv["coalesce_speedup"] < 1.0:
+            regressions.append((backend, "serve", "coalesce_speedup",
+                                1.0, sv["coalesce_speedup"], 0.0))
 assert not regressions, (
     f"steady-state us/q regressed >{budget}% vs committed "
     f"BENCH_quick.json: {regressions}")
